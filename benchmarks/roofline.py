@@ -1,0 +1,184 @@
+"""Roofline analysis over the dry-run sweep outputs (EXPERIMENTS.md §Roofline).
+
+Per (arch × shape × mesh) cell, from the compiled artifacts:
+
+  compute term    = calibrated HLO_FLOPs_per_chip / 197e12   [bf16 MXU]
+  memory term     = calibrated HLO_bytes_per_chip / 819e9    [HBM]
+  collective term = collective_bytes_per_chip / 50e9         [ICI per link]
+
+with two principled corrections documented in §Methodology:
+
+  * flash-bytes substitution: the calibration compiles run attention
+    unchunked; the L·T² bytes coefficient (attention score traffic) is
+    replaced by the chunked program's K/V re-read traffic
+    (T²/q_chunk · Kh_local·Dh·2·bytes·B_local per layer).
+  * CPU-backend storage: calibration programs compute largely in f32 where
+    TPU uses bf16 — the memory term carries a 0.5x dtype factor
+    (flops unaffected).
+
+MODEL_FLOPS = 6·N_active·D tokens (training) / 2·N_active (per decoded
+token) gives the useful-compute yardstick; MODEL_FLOPS / HLO_FLOPs exposes
+remat/replication waste.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+import numpy as np
+
+PEAK_FLOPS = 197e12      # bf16 / chip (TPU v5e)
+HBM_BW = 819e9           # bytes/s / chip
+ICI_BW = 50e9            # bytes/s / link
+HBM_PER_CHIP = 16e9      # v5e HBM capacity
+DTYPE_FACTOR = 0.5       # CPU-backend f32 storage vs TPU bf16
+
+
+def model_flops_for(meta: Dict, rec: Dict) -> float:
+    """6·N_active·tokens (train) or 2·N_active·tokens (fwd-only), total.
+
+    N_active = matmul params touched per token (embedding gather excluded,
+    MoE counts top_k experts only, MPD-packed layers count packed size).
+    """
+    from repro.configs.common import SHAPES, get_config
+    from repro.models import build
+
+    cfg = get_config(rec["arch"], mpd_c=rec.get("mpd_c", 8),
+                     mpd_mode=rec.get("mpd_mode", "packed"))
+    shape = SHAPES[rec["shape"]]
+    model = build(cfg)
+    n_active = model.active_matmul_params()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    return 2.0 * n_active * shape.global_batch  # decode: 1 token/seq
+
+
+def flash_bytes_substitution(rec: Dict) -> Optional[float]:
+    """Replace the unchunked-attention T² bytes with chunked K/V re-reads."""
+    cal = rec.get("calibrated")
+    if not cal or "coef_bytes" not in cal or "LT2" not in cal.get("features", []):
+        return None
+    from repro.configs.common import SHAPES, get_config
+    cfg = get_config(rec["arch"])
+    shape = SHAPES[rec["shape"]]
+    i = cal["features"].index("LT2")
+    gamma = cal["coef_bytes"][i]
+    L, T = cal["L_full"], cal["T_full"]
+    naive_quad = gamma * L * T * T
+    mesh_shape = rec.get("meta", {}).get("mesh", {"data": 16, "model": 16})
+    n_data = mesh_shape.get("data", 16) * mesh_shape.get("pod", 1)
+    n_model = mesh_shape.get("model", 16)
+    B_local = max(shape.global_batch // n_data, 1)
+    kh_local = max(cfg.n_kv_heads // n_model, 1) if cfg.n_kv_heads else 1
+    hd = cfg.hd if cfg.n_heads else 0
+    cq = rec.get("meta", {}).get("q_chunk", 128)
+    n_attn = sum(1 for k in cfg.pattern if k.startswith("attn")) / len(cfg.pattern)
+    mult = 3.0 if shape.kind == "train" else 1.0  # fwd+bwd re-reads
+    flash_quad = (cfg.n_layers * n_attn * B_local * (T * T / cq)
+                  * kh_local * hd * 2 * 2 * mult)
+    return max(cal["bytes"] - max(naive_quad, 0.0), 0.0) + flash_quad
+
+
+def analyse(rec: Dict) -> Optional[Dict]:
+    if rec.get("status") != "ok":
+        return None
+    chips = 512 if rec.get("mesh") == "2x16x16" else 256
+    cal = rec.get("calibrated") or {}
+    if not cal:
+        # multi-pod cells skip calibration: compile-proof + memory +
+        # collectives only (raw flops undercount loop bodies — see
+        # §Methodology); compute/useful columns are not meaningful there.
+        coll = rec.get("collectives", {}).get("total", 0)
+        return {
+            "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+            "scheme": rec.get("scheme"), "mpd_mode": rec.get("mpd_mode"),
+            "compile_proof_only": True,
+            "t_collective_s": coll / ICI_BW,
+            "peak_mem_gb": rec["memory"]["peak_per_device_bytes"] / 1e9,
+            "mem_fits_16g": rec["memory"]["peak_per_device_bytes"]
+                            * DTYPE_FACTOR < HBM_PER_CHIP,
+            "collective_gb": coll / 1e9,
+        }
+    flops = cal.get("flops") or rec["cost_raw"]["flops"]
+    raw_bytes = cal.get("bytes") or rec["cost_raw"]["bytes"]
+    fb = flash_bytes_substitution(rec)
+    bytes_eff = (fb if fb is not None else raw_bytes) * DTYPE_FACTOR
+    coll = rec.get("collectives", {}).get("total", 0)
+
+    t_compute = flops / PEAK_FLOPS
+    t_memory = bytes_eff / HBM_BW
+    t_coll = coll / ICI_BW
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    step = max(terms.values())
+    mf = model_flops_for(rec.get("meta", {}), rec)
+    mf_per_chip = mf / chips
+    out = {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "scheme": rec.get("scheme"), "mpd_mode": rec.get("mpd_mode"),
+        "t_compute_s": t_compute, "t_memory_s": t_memory,
+        "t_collective_s": t_coll, "dominant": dominant,
+        "step_time_s": step,
+        "model_flops_per_chip": mf_per_chip,
+        "hlo_flops_per_chip": flops,
+        "useful_compute_ratio": mf_per_chip / flops if flops else 0.0,
+        "roofline_fraction": (mf_per_chip / PEAK_FLOPS) / step if step else 0.0,
+        "peak_mem_gb": rec["memory"]["peak_per_device_bytes"] / 1e9,
+        "mem_fits_16g": rec["memory"]["peak_per_device_bytes"] * DTYPE_FACTOR
+                         < HBM_PER_CHIP,
+        "collective_gb": coll / 1e9,
+    }
+    return out
+
+
+def load_all(result_dir: str) -> List[Dict]:
+    out = []
+    for f in sorted(glob.glob(os.path.join(result_dir, "*.json"))):
+        with open(f) as fh:
+            out.append(json.load(fh))
+    return out
+
+
+def table(result_dir: str = "results/dryrun") -> List[str]:
+    rows = []
+    for rec in load_all(result_dir):
+        if rec.get("status") == "skipped":
+            rows.append(f"roofline,{rec['arch']},{rec['shape']},{rec.get('mesh','16x16')},SKIP,{rec.get('reason','')}")
+            continue
+        a = analyse(rec)
+        if a is None:
+            rows.append(f"roofline,{rec['arch']},{rec['shape']},{rec.get('mesh')},ERROR,{rec.get('error','')[:60]}")
+            continue
+        if a.get("compile_proof_only"):
+            rows.append(
+                f"roofline,{a['arch']},{a['shape']},{a['mesh']},"
+                f"compile=OK,collective={a['t_collective_s']*1e3:.1f}ms,"
+                f"mem={a['peak_mem_gb']:.1f}GB,"
+                f"fits16G={'Y' if a['mem_fits_16g'] else 'N'}")
+            continue
+        rows.append(
+            f"roofline,{a['arch']},{a['shape']},{a['mesh']},"
+            f"compute={a['t_compute_s']*1e3:.1f}ms,"
+            f"memory={a['t_memory_s']*1e3:.1f}ms,"
+            f"collective={a['t_collective_s']*1e3:.1f}ms,"
+            f"dominant={a['dominant']},"
+            f"useful={a['useful_compute_ratio']*100:.0f}%,"
+            f"roofline_frac={a['roofline_fraction']*100:.1f}%,"
+            f"mem={a['peak_mem_gb']:.1f}GB")
+    return rows
+
+
+def main():
+    for r in table():
+        print(r)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""The paper's full pipeline (Figs 2-3): train with binary masks applied to
+dense weights, then FOLD into the packed block-diagonal inference form and
+verify the two are numerically identical while the packed one holds 1/c of
+the parameters.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data import SyntheticLM
+from repro.models import ModelConfig, build
+from repro.optim import OptConfig
+from repro.train import TrainConfig, run
+from tests.test_models import fold_params  # model-wide Eq.(2) fold
+
+cfg_md = ModelConfig(name="faithful", n_layers=2, d_model=64, n_heads=4,
+                     n_kv_heads=2, d_ff=128, vocab=64, mpd_c=4,
+                     mpd_mode="masked_dense", q_chunk=1024)
+model_md = build(cfg_md)
+data = SyntheticLM(vocab=64, seq_len=32, global_batch=16, seed=1)
+out = run(model_md, TrainConfig(opt=OptConfig(lr=3e-3)), data, num_steps=60)
+params_md = out["params"]
+
+cfg_pk = dataclasses.replace(cfg_md, mpd_mode="packed")
+model_pk = build(cfg_pk)
+params_pk = fold_params(model_md, model_pk, params_md)
+
+toks = jnp.asarray(data.next()["inputs"][:2, :16])
+lg_md = model_md.logits(params_md, toks)
+lg_pk = model_pk.logits(params_pk, toks)
+err = float(jnp.max(jnp.abs(lg_md - lg_pk)))
+n_md = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(params_md))
+n_pk = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(params_pk))
+print(f"masked-dense params: {n_md:,}; folded packed params: {n_pk:,} "
+      f"({n_md/n_pk:.2f}x smaller)")
+print(f"max |logit diff| after folding: {err:.2e}")
+assert err < 1e-3
+print("compress_and_fold OK (paper Eq. 2 verified end-to-end)")

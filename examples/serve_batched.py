@@ -1,0 +1,46 @@
+"""Batched serving example (deliverable b): prefill a batch of prompts, then
+decode with a shared KV cache — the packed block-diagonal weights serve at
+1/c the FLOPs and bytes of the dense model (paper §3.3).
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.data import SyntheticLM
+from repro.models import ModelConfig, build
+
+cfg = ModelConfig(name="server", n_layers=4, d_model=256, n_heads=8,
+                  n_kv_heads=4, d_ff=512, vocab=1024, mpd_c=8, q_chunk=1024)
+model = build(cfg)
+params = model.init(jax.random.PRNGKey(0))
+print(f"serving {model.param_count():,} packed params (c={cfg.mpd_c})")
+
+BATCH, PROMPT, GEN, MAXLEN = 8, 32, 16, 64
+data = SyntheticLM(vocab=cfg.vocab, seq_len=PROMPT, global_batch=BATCH, seed=0)
+prompts = jnp.asarray(data.next()["inputs"])
+
+caches = model.init_caches(BATCH, MAXLEN, dtype=jnp.float32)
+prefill = jax.jit(model.prefill)
+decode = jax.jit(model.decode_step)
+
+t0 = time.perf_counter()
+logits, caches = prefill(params, prompts, caches)
+jax.block_until_ready(logits)
+t_prefill = time.perf_counter() - t0
+
+tok = jnp.argmax(logits, -1)
+outs = [tok]
+t0 = time.perf_counter()
+for _ in range(GEN - 1):
+    logits, caches = decode(params, tok, caches)
+    tok = jnp.argmax(logits, -1)
+    outs.append(tok)
+jax.block_until_ready(tok)
+t_decode = time.perf_counter() - t0
+
+print(f"prefill: {BATCH}x{PROMPT} tokens in {t_prefill*1e3:.1f} ms "
+      f"({BATCH*PROMPT/t_prefill:.0f} tok/s)")
+print(f"decode: {GEN-1} steps x {BATCH} seqs in {t_decode*1e3:.1f} ms "
+      f"({BATCH*(GEN-1)/t_decode:.0f} tok/s)")
+print("serve_batched OK")

@@ -1,0 +1,3 @@
+"""repro: MPDCompress as a production-grade multi-pod JAX framework."""
+
+__version__ = "0.1.0"

@@ -1,0 +1,89 @@
+"""Config registry + the assigned input-shape suite.
+
+Every assigned architecture module exposes ``full()`` (the exact published
+config) and ``smoke()`` (a reduced same-family config for CPU tests). The
+registry maps ``--arch <id>`` to those builders and records per-arch shape
+applicability (documented skips — see DESIGN.md §Arch-applicability).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Dict, Optional, Tuple
+
+from repro.models.model import ModelConfig
+
+ARCHS = (
+    "hubert-xlarge", "olmo-1b", "granite-8b", "command-r-plus-104b",
+    "minitron-4b", "qwen2-moe-a2.7b", "llama4-maverick-400b-a17b",
+    "rwkv6-3b", "qwen2-vl-72b", "jamba-v0.1-52b",
+)
+
+_MODULES = {
+    "hubert-xlarge": "hubert_xlarge",
+    "olmo-1b": "olmo_1b",
+    "granite-8b": "granite_8b",
+    "command-r-plus-104b": "command_r_plus_104b",
+    "minitron-4b": "minitron_4b",
+    "qwen2-moe-a2.7b": "qwen2_moe_a2_7b",
+    "llama4-maverick-400b-a17b": "llama4_maverick_400b_a17b",
+    "rwkv6-3b": "rwkv6_3b",
+    "qwen2-vl-72b": "qwen2_vl_72b",
+    "jamba-v0.1-52b": "jamba_v0_1_52b",
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524_288, 1, "decode"),
+}
+
+
+def get_module(arch: str):
+    return importlib.import_module(f"repro.configs.{_MODULES[arch]}")
+
+
+def get_config(arch: str, smoke: bool = False, **overrides) -> ModelConfig:
+    mod = get_module(arch)
+    cfg = mod.smoke() if smoke else mod.full()
+    return dataclasses.replace(cfg, **overrides) if overrides else cfg
+
+
+def _is_encoder(cfg: ModelConfig) -> bool:
+    return not cfg.causal
+
+
+def _is_subquadratic(cfg: ModelConfig) -> bool:
+    """True when sequence cost is O(T): SSM/hybrid patterns (attention-free or
+    attention-minority with O(1)-state decode dominating)."""
+    return any(k in ("rwkv", "mamba", "mamba_moe") for k in cfg.pattern)
+
+
+def cell_status(arch: str, shape: str) -> Tuple[bool, str]:
+    """(runnable, reason). The 9 documented skips of the 40-cell matrix."""
+    cfg = get_config(arch)
+    s = SHAPES[shape]
+    if _is_encoder(cfg):
+        if s.kind == "decode":
+            return False, "encoder-only arch has no decode step"
+    if s.name == "long_500k" and not _is_subquadratic(cfg):
+        return False, "pure full-attention arch; 500k decode skipped (see DESIGN.md)"
+    return True, ""
+
+
+def all_cells():
+    for arch in ARCHS:
+        for shape in SHAPES:
+            ok, why = cell_status(arch, shape)
+            yield arch, shape, ok, why

@@ -1,0 +1,61 @@
+"""LeNet-300-100 — the paper's own §3.1 model, as an MLP classifier stack.
+
+Not part of the assigned-architecture matrix; used by the paper-figure
+benchmarks (Table 1 / Fig 4) with the TeacherStudent data stand-in. Built
+directly from MPDLinear layers (784-300-100-10) rather than the LM zoo."""
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import mpd
+from repro.core.policy import CompressionPolicy
+
+
+@dataclasses.dataclass(frozen=True)
+class LeNet300:
+    d_in: int = 800  # 784 padded to 800 so c=10 divides exactly (see data pipeline)
+    h1: int = 300
+    h2: int = 100
+    n_classes: int = 10
+    policy: CompressionPolicy = CompressionPolicy(c=1)
+    mode: str = "packed"
+
+    def _specs(self):
+        pol = self.policy
+        dims = [(self.d_in, self.h1, "mlp", 1), (self.h1, self.h2, "mlp", 2),
+                (self.h2, self.n_classes, "head", 3)]
+        specs = []
+        for d_in, d_out, kind, salt in dims:
+            mask = pol.plan(d_in, d_out, kind, seed_salt=salt)
+            mode = self.mode if mask is not None else "dense"
+            specs.append(mpd.MPDLinearSpec(d_in, d_out, mask, mode=mode))
+        return specs
+
+    def init(self, key):
+        ks = jax.random.split(key, 3)
+        return [mpd.init(k, s) for k, s in zip(ks, self._specs())]
+
+    def apply(self, params, x):
+        specs = self._specs()
+        h = jnp.maximum(mpd.apply(specs[0], params[0], x), 0)
+        h = jnp.maximum(mpd.apply(specs[1], params[1], h), 0)
+        return mpd.apply(specs[2], params[2], h)
+
+    def loss(self, params, batch):
+        lg = self.apply(params, batch["inputs"]).astype(jnp.float32)
+        lse = jax.nn.logsumexp(lg, axis=-1)
+        ll = jnp.take_along_axis(lg, batch["labels"][:, None], axis=-1)[:, 0]
+        return jnp.mean(lse - ll)
+
+    def accuracy(self, params, batch):
+        lg = self.apply(params, batch["inputs"])
+        return jnp.mean((jnp.argmax(lg, -1) == batch["labels"]).astype(jnp.float32))
+
+    def fc_param_count(self) -> int:
+        return sum(s.param_count() for s in self._specs())
+
+    def reapply_masks(self, params):
+        return [mpd.reapply_mask(s, p) for s, p in zip(self._specs(), params)]

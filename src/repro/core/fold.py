@@ -1,0 +1,92 @@
+"""Folding masked-dense MPD weights into the packed block-diagonal form.
+
+Paper Eq. (2): ``W* = P_row^T W̄ P_col^T`` is exactly block diagonal because
+the mask ``M`` is a permutation of the block-diagonal base ``B``. We store
+``W*`` *packed* — only the diagonal blocks — as a tensor of shape
+``(nb, block_in, block_out)``, which is the layout consumed by the Pallas
+block-diagonal matmul kernel (:mod:`repro.kernels.bdmm`).
+
+Inference dataflow for ``y = x @ W̄`` (derivation mirrors paper §2):
+
+    x'      = take(x, invert(p_in),  axis=-1)        # pack inputs
+    y'[n]   = x'[n-th block] @ Wp[n]                 # nb independent matmuls
+    y       = take(y', p_out, axis=-1)               # unpack outputs
+
+and for fused chains (:func:`repro.core.mask.chain_specs`) the inner
+``take``s cancel (paper Fig 3 remark).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import numpy as np
+import jax.numpy as jnp
+
+from . import permute
+from .mask import MaskSpec, mask_dense
+
+
+def fold(spec: MaskSpec, w_dense) -> jnp.ndarray:
+    """Fold a (masked-)dense ``(d_in, d_out)`` weight into packed blocks.
+
+    Returns ``Wp`` of shape ``(nb, block_in, block_out)`` with
+    ``Wp[n] = W*[n·bi:(n+1)·bi, n·bo:(n+1)·bo]`` where
+    ``W* = W̄[invert(p_in), :][:, invert(p_out)]``.
+
+    Off-mask entries of ``w_dense`` are dropped (they are exact zeros after
+    masked training; :func:`fold_check` asserts this in tests).
+    """
+    bi, bo, nb = spec.block_in, spec.block_out, spec.nb
+    w_star = jnp.take(jnp.take(jnp.asarray(w_dense), jnp.asarray(permute.invert(spec.in_perm)), axis=0),
+                      jnp.asarray(permute.invert(spec.out_perm)), axis=1)
+    w_star = w_star.reshape(nb, bi, nb, bo)
+    return w_star[jnp.arange(nb), :, jnp.arange(nb), :]  # (nb, bi, bo)
+
+
+def unfold(spec: MaskSpec, packed) -> jnp.ndarray:
+    """Inverse of :func:`fold`: packed blocks -> masked-dense ``(d_in, d_out)``.
+
+    Round-trips exactly: ``unfold(spec, fold(spec, M*W)) == M*W``.
+    """
+    bi, bo, nb = spec.block_in, spec.block_out, spec.nb
+    w_star = jnp.zeros((nb, bi, nb, bo), dtype=packed.dtype)
+    w_star = w_star.at[jnp.arange(nb), :, jnp.arange(nb), :].set(packed)
+    w_star = w_star.reshape(spec.d_in, spec.d_out)
+    return jnp.take(jnp.take(w_star, jnp.asarray(spec.in_perm), axis=0),
+                    jnp.asarray(spec.out_perm), axis=1)
+
+
+def fold_residual(spec: MaskSpec, w_dense) -> float:
+    """Fraction of |W| mass living off-mask (0 after faithful masked training)."""
+    w = np.asarray(w_dense)
+    m = mask_dense(spec, w.dtype)
+    total = float(np.abs(w).sum()) + 1e-30
+    return float(np.abs(w * (1 - m)).sum()) / total
+
+
+def inter_layer_perm(prev: MaskSpec, nxt: MaskSpec) -> np.ndarray:
+    """Single fused gather carrying layer ``prev``'s packed output into layer
+    ``nxt``'s packed input.
+
+    ``take(take(y', prev.out_perm), invert(nxt.in_perm)) == take(y', g)`` with
+    ``g = prev.out_perm[invert(nxt.in_perm)]``. For chains built with
+    ``chain_specs(..., fuse=True)`` this is the identity, i.e. zero runtime
+    cost — the paper's permutation-cancellation trick.
+    """
+    assert prev.d_out == nxt.d_in
+    return permute.compose(permute.invert(nxt.in_perm), prev.out_perm)
+
+
+def pack_inputs(spec: MaskSpec, x, skip: bool = False):
+    """``x -> x'`` gather (identity when the permutation was fused away)."""
+    if skip:
+        return x
+    return permute.apply(permute.invert(spec.in_perm), x, axis=-1)
+
+
+def unpack_outputs(spec: MaskSpec, y, skip: bool = False):
+    """``y' -> y`` gather (identity when fused into the next layer)."""
+    if skip:
+        return y
+    return permute.apply(spec.out_perm, y, axis=-1)

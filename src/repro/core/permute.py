@@ -1,0 +1,93 @@
+"""Permutation algebra for MPDCompress.
+
+A permutation over ``n`` indices is represented as an ``int32`` array ``p`` of
+shape ``(n,)`` used in *gather* convention::
+
+    apply(p, x)[i] == x[p[i]]
+
+All algebra below is defined against that convention. Permutations are plain
+``numpy`` arrays at build time (they are static model metadata, baked into
+jitted programs as constants) and ``jnp.take`` is used to apply them inside
+traced code.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = np.ndarray
+
+
+def identity(n: int) -> Array:
+    return np.arange(n, dtype=np.int32)
+
+
+def random_permutation(rng: np.random.Generator, n: int) -> Array:
+    """Uniform random permutation of ``n`` indices."""
+    return rng.permutation(n).astype(np.int32)
+
+
+def invert(p: Array) -> Array:
+    """Inverse permutation: ``apply(invert(p), apply(p, x)) == x``."""
+    inv = np.empty_like(p)
+    inv[p] = np.arange(p.shape[0], dtype=p.dtype)
+    return inv
+
+
+def compose(p: Array, q: Array) -> Array:
+    """Composition such that ``apply(compose(p, q), x) == apply(p, apply(q, x))``.
+
+    Proof: ``apply(p, apply(q, x))[i] = apply(q, x)[p[i]] = x[q[p[i]]]``, so the
+    composed gather indices are ``q[p]``.
+    """
+    return q[p]
+
+
+def is_identity(p: Array) -> bool:
+    return bool(np.all(p == np.arange(p.shape[0], dtype=p.dtype)))
+
+
+def apply(p: Array, x, axis: int = -1):
+    """Apply permutation ``p`` along ``axis`` of a (possibly traced) array.
+
+    Carries a custom VJP: the transpose of a *bijective* gather is the
+    inverse gather, NOT a scatter-add. XLA/GSPMD cannot see the bijection on
+    its own and lowers the gather transpose as a scatter, which SPMD
+    partitioning then replicates (measured: 4.3 GB all-reduces per layer per
+    microbatch on the 16x16 mesh). With the custom VJP both directions are
+    plain gathers and partition cleanly.
+    """
+    p = np.asarray(p)
+    if is_identity(p):
+        return x
+    inv = invert(p)
+
+    @jax.custom_vjp
+    def gather(x):
+        return jnp.take(x, jnp.asarray(p), axis=axis)
+
+    def fwd(x):
+        return gather(x), None
+
+    def bwd(_, g):
+        return (jnp.take(g, jnp.asarray(inv), axis=axis),)
+
+    gather.defvjp(fwd, bwd)
+    return gather(x)
+
+
+def apply_np(p: Array, x: np.ndarray, axis: int = -1) -> np.ndarray:
+    return np.take(x, p, axis=axis)
+
+
+def permutation_matrix(p: Array) -> np.ndarray:
+    """Dense 0/1 matrix ``P`` with ``P @ x == apply(p, x)`` for column vectors.
+
+    Used only in tests to cross-check against the paper's matrix notation.
+    """
+    n = p.shape[0]
+    m = np.zeros((n, n), dtype=np.float32)
+    m[np.arange(n), p] = 1.0
+    return m

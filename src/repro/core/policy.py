@@ -1,0 +1,74 @@
+"""Compression policy — which projections get MPD masks and at what factor.
+
+The paper sets a single hyper-parameter (sparsity level == 1/c) per FC layer.
+At framework scale we need a *plan*: per layer-kind compression factors,
+MXU-alignment constraints, and divisibility fallbacks, resolved once per
+model into a dict of :class:`MaskSpec` objects keyed by parameter path.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+from .mask import MaskSpec, divisible, make_mask_spec
+
+# layer kinds the model zoo tags its projections with
+KINDS = (
+    "attn_qkv", "attn_out", "mlp", "moe_expert", "ssm_proj", "unembed", "head",
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressionPolicy:
+    """Resolved per-kind compression factors.
+
+    ``c=1`` (or a kind missing from ``per_kind``) leaves the projection dense.
+    ``min_block`` keeps packed blocks MXU-friendly: the largest ``nb <= c``
+    dividing both dims with ``block >= min_block`` is chosen; if none exists
+    the layer stays dense (recorded via :meth:`plan` returning ``None``).
+    """
+
+    c: int = 1  # default compression factor for all kinds
+    per_kind: Optional[Dict[str, int]] = None
+    min_block: int = 8  # raise to 128 for MXU-aligned production plans
+    permuted: bool = True  # False reproduces the paper's no-permutation ablation
+    seed: int = 0
+    # training parameterization: "packed" (beyond-paper optimized) or
+    # "masked_dense" (paper-faithful Fig 2 baseline)
+    mode: str = "packed"
+
+    def factor(self, kind: str) -> int:
+        if self.per_kind and kind in self.per_kind:
+            return self.per_kind[kind]
+        return self.c
+
+    def plan(self, d_in: int, d_out: int, kind: str, seed_salt: int = 0) -> Optional[MaskSpec]:
+        """Resolve one projection. Returns None => keep dense."""
+        c = self.factor(kind)
+        if c <= 1:
+            return None
+        nb = c
+        while nb > 1:
+            if (
+                divisible(d_in, d_out, nb)
+                and d_in // nb >= self.min_block
+                and d_out // nb >= self.min_block
+            ):
+                return make_mask_spec(
+                    d_in, d_out, nb,
+                    seed=self.seed * 1_000_003 + seed_salt,
+                    permuted=self.permuted,
+                )
+            nb -= 1
+        return None
+
+
+DENSE = CompressionPolicy(c=1)
+
+
+def uniform(c: int, min_block: int = 8, permuted: bool = True, seed: int = 0,
+            mode: str = "packed") -> CompressionPolicy:
+    """The paper's setting: one compression factor for every FC layer."""
+    return CompressionPolicy(c=c, min_block=min_block, permuted=permuted,
+                             seed=seed, mode=mode)

@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for MPDCompress hot spots.
+
+- ``bdmm``          : block-diagonal matmul (packed inference/training form)
+- ``masked_matmul`` : fused mask∘W matmul (paper-faithful training, Fig 2)
+- ``ops``           : jit'd differentiable wrappers + backend routing
+- ``ref``           : pure-jnp oracles
+"""
+
+from . import ops, ref  # noqa: F401

@@ -1,0 +1,124 @@
+"""Public kernel entry points with backend routing + custom VJPs.
+
+Routing policy (override with ``repro.kernels.ops.set_backend``):
+
+* ``"pallas"``  — real Pallas lowering (TPU target).
+* ``"interpret"`` — Pallas interpret mode (CPU correctness checks; slow).
+* ``"jnp"``     — pure-jnp reference path (fast on CPU). Default off-TPU.
+
+The custom VJPs wrap the *raw* matmuls so that (a) gradients flow through the
+fused kernels rather than XLA's transpose of the reference and (b) the
+masked-dense training invariant (off-mask grads are exact zeros) holds by
+construction. Bias/activation compose outside — XLA fuses those elementwise
+epilogues on its own; serving paths that want the Pallas-fused epilogue call
+:func:`repro.kernels.bdmm.bdmm` directly (it is not differentiated).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import bdmm as bdmm_kernel
+from . import masked_matmul as mm_kernel
+from . import ref
+
+_BACKEND = "jnp" if jax.default_backend() != "tpu" else "pallas"
+
+
+def set_backend(name: str) -> None:
+    global _BACKEND
+    assert name in ("pallas", "interpret", "jnp"), name
+    _BACKEND = name
+
+
+def get_backend() -> str:
+    return _BACKEND
+
+
+# --------------------------------------------------------------------------
+# bdmm — block-diagonal matmul (packed inference/training form)
+# --------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def _bdmm(x, wp, precision):
+    if _BACKEND == "jnp":
+        return ref.bdmm_ref(x, wp, precision=precision)
+    return bdmm_kernel.bdmm(x, wp, interpret=(_BACKEND == "interpret"))
+
+
+def _bdmm_fwd(x, wp, precision):
+    return _bdmm(x, wp, precision), (x, wp)
+
+
+def _bdmm_bwd(precision, res, g):
+    x, wp = res
+    nb, bi, bo = wp.shape
+    lead = x.shape[:-1]
+    # dx[:, n, :] = g[:, n, :] @ wp[n]^T    (another bdmm with transposed blocks)
+    dx = _bdmm(g, jnp.swapaxes(wp, 1, 2), precision).reshape(*lead, nb * bi)
+    # dwp[n] = x[:, n, :]^T @ g[:, n, :]    (per-block SDDMM-free dense grad)
+    xb = x.reshape(-1, nb, bi)
+    gb = g.reshape(-1, nb, bo)
+    dwp = jnp.einsum("tnk,tno->nko", xb, gb, precision=precision).astype(wp.dtype)
+    return dx, dwp
+
+
+_bdmm.defvjp(_bdmm_fwd, _bdmm_bwd)
+
+
+def bdmm(x, wp, bias=None, *, activation: Optional[str] = None, precision=None):
+    """Differentiable block-diagonal matmul ``(..., nb*bi) -> (..., nb*bo)``.
+
+    ``bias`` is packed ``(nb*bo,)``; activation is fused by XLA (or by the
+    Pallas epilogue on the non-differentiated serving path).
+    """
+    y = _bdmm(x, wp, precision)
+    if bias is not None:
+        y = y + bias
+    return ref.ACTIVATIONS[activation](y)
+
+
+# --------------------------------------------------------------------------
+# masked matmul — paper-faithful training op
+# --------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def _masked_matmul(x, w, mask, precision):
+    if _BACKEND == "jnp":
+        return ref.masked_matmul_ref(x, w, mask, precision=precision)
+    return mm_kernel.masked_matmul(x, w, mask, interpret=(_BACKEND == "interpret"))
+
+
+def _masked_matmul_fwd(x, w, mask, precision):
+    return _masked_matmul(x, w, mask, precision), (x, w, mask)
+
+
+def _masked_matmul_bwd(precision, res, g):
+    x, w, mask = res
+    if _BACKEND == "jnp":
+        dx = jnp.dot(g, (w * mask.astype(w.dtype)).T, precision=precision)
+        dw = ref.matmul_masked_grad_ref(
+            x.reshape(-1, x.shape[-1]), g.reshape(-1, g.shape[-1]), mask,
+            precision=precision,
+        ).astype(w.dtype)
+    else:
+        interp = _BACKEND == "interpret"
+        dx = mm_kernel.masked_matmul(g, w, mask, transpose_rhs=True, interpret=interp)
+        dw = mm_kernel.sddmm_masked(x, g, mask, interpret=interp).astype(w.dtype)
+    return dx, dw, jnp.zeros_like(mask)
+
+
+_masked_matmul.defvjp(_masked_matmul_fwd, _masked_matmul_bwd)
+
+
+def masked_matmul(x, w, mask, bias=None, *, activation: Optional[str] = None,
+                  precision=None):
+    """Differentiable ``y = act(x @ (mask ∘ w) + b)`` with masked gradients."""
+    y = _masked_matmul(x, w, jax.lax.stop_gradient(mask), precision)
+    if bias is not None:
+        y = y + bias
+    return ref.ACTIVATIONS[activation](y)

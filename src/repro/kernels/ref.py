@@ -1,0 +1,57 @@
+"""Pure-jnp oracles for the MPDCompress kernels.
+
+These are the correctness references the Pallas kernels are tested against
+(interpret mode on CPU, real lowering on TPU), and also the fast CPU
+execution path used by the examples/benchmarks in this container.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+ACTIVATIONS = {
+    None: lambda x: x,
+    "relu": lambda x: jnp.maximum(x, 0),
+    "gelu": lambda x: 0.5 * x * (1 + jnp.tanh(0.7978845608028654 * (x + 0.044715 * x**3))),
+    "silu": lambda x: x * (1 / (1 + jnp.exp(-x))),
+}
+
+
+def bdmm_ref(x, wp, bias=None, activation: Optional[str] = None, precision=None):
+    """Block-diagonal matmul oracle.
+
+    Args:
+      x:  ``(..., nb*bi)`` packed inputs (already input-permuted).
+      wp: ``(nb, bi, bo)`` packed diagonal blocks.
+      bias: optional ``(nb*bo,)`` packed bias.
+      activation: optional fused activation name.
+
+    Returns ``(..., nb*bo)`` packed outputs.
+    """
+    nb, bi, bo = wp.shape
+    lead = x.shape[:-1]
+    xb = x.reshape(*lead, nb, bi)
+    y = jnp.einsum("...nk,nko->...no", xb, wp, precision=precision)
+    y = y.reshape(*lead, nb * bo)
+    if bias is not None:
+        y = y + bias
+    return ACTIVATIONS[activation](y)
+
+
+def masked_matmul_ref(x, w, mask, bias=None, activation: Optional[str] = None, precision=None):
+    """Paper-faithful masked matmul oracle: ``y = x @ (mask ∘ w)``.
+
+    ``x: (..., d_in)``, ``w/mask: (d_in, d_out)``.
+    """
+    y = jnp.dot(x, w * mask.astype(w.dtype), precision=precision)
+    if bias is not None:
+        y = y + bias
+    return ACTIVATIONS[activation](y)
+
+
+def matmul_masked_grad_ref(x, g, mask, precision=None):
+    """Oracle for the weight-gradient of the masked matmul:
+    ``dW = (x^T @ g) ∘ mask`` (an SDDMM — output sampled by the mask)."""
+    return jnp.einsum("...i,...o->io", x, g, precision=precision) * mask

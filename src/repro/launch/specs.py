@@ -1,0 +1,289 @@
+"""ShapeDtypeStruct stand-ins + sharding construction for every
+(architecture × input shape) cell.
+
+``input_specs`` builds the full argument pytrees for the cell's step function
+(train_step / prefill_step / serve_step) with *no device allocation* — the
+pattern the dry-run lowers and compiles. Shardings are derived from logical
+axes with a divisibility sanitizer: a dim that an axis assignment doesn't
+divide evenly is replicated instead (e.g. 8 KV heads on a 16-way model axis),
+which keeps every cell compilable; the cost shows up honestly in the
+roofline's collective term rather than as a crash.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.common import SHAPES, ShapeSpec, get_config
+from repro.dist import sharding as sh
+from repro.models.model import Model, ModelConfig, build
+from repro.optim import OptConfig, optimizer as opt_lib
+from . import mesh as mesh_lib
+
+SDS = jax.ShapeDtypeStruct
+
+
+# ---------------------------------------------------------------- sanitizer
+
+def _axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        return mesh.shape[axes]
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def sanitize_spec(mesh: Mesh, spec: P, shape: Tuple[int, ...]) -> P:
+    """Divisibility sanitizer with relocation.
+
+    A mesh-axis assignment that doesn't divide its dim is first *relocated*
+    to the rightmost unsharded dim it does divide (e.g. an 8-KV-head axis on
+    a 16-way model axis moves to head_dim — the standard GQA head-dim-split;
+    an nb=8 MPD block axis moves to the block's output dim — TP within
+    blocks). Only if no dim fits is it dropped (replicated). Without
+    relocation, replicated weights silently multiply compute by the whole
+    model-axis size (measured 16x on this mesh — see EXPERIMENTS.md §Perf).
+    """
+    parts = list(spec) + [None] * (len(shape) - len(spec))
+    out = []
+    dropped = []
+    for i, (dim, axes) in enumerate(zip(shape, parts)):
+        n = _axis_size(mesh, axes)
+        if n == 1 or dim % n == 0:
+            out.append(axes)
+        else:
+            out.append(None)
+            dropped.append(axes)
+
+    def used_names():
+        s = set()
+        for a in out:
+            if a is None:
+                continue
+            s.update((a,) if isinstance(a, str) else a)
+        return s
+
+    for axes in dropped:
+        names = set((axes,) if isinstance(axes, str) else axes)
+        if names & used_names():
+            continue  # a mesh axis may appear at most once per spec
+        n = _axis_size(mesh, axes)
+        for i in range(len(shape) - 1, -1, -1):
+            if out[i] is None and shape[i] % n == 0 and shape[i] >= n:
+                out[i] = axes
+                break
+    return P(*out)
+
+
+def tree_shardings_for(mesh: Mesh, rules: Dict[str, tuple], axes_tree, sds_tree):
+    """NamedShardings for a pytree, divisibility-sanitized per leaf shape."""
+    is_names = lambda t: isinstance(t, tuple) and all(
+        x is None or isinstance(x, str) for x in t)
+    flat_a, tdef = jax.tree.flatten(axes_tree, is_leaf=is_names)
+    flat_s = tdef.flatten_up_to(sds_tree)
+    out = []
+    for names, sds in zip(flat_a, flat_s):
+        spec = sh.spec_for(tuple(names), rules)
+        spec = sanitize_spec(mesh, spec, sds.shape)
+        out.append(NamedSharding(mesh, spec))
+    return tdef.unflatten(out)
+
+
+# ------------------------------------------------------------------- batches
+
+def batch_specs(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, SDS]:
+    B, T = shape.global_batch, shape.seq_len
+    if cfg.frontend == "token":
+        inputs = SDS((B, T), jnp.int32)
+    else:
+        inputs = SDS((B, T, cfg.d_model), jnp.bfloat16)
+    return {"inputs": inputs, "labels": SDS((B, T), jnp.int32)}
+
+
+def batch_axes(cfg: ModelConfig) -> Dict[str, tuple]:
+    if cfg.frontend == "token":
+        return {"inputs": ("batch", None), "labels": ("batch", None)}
+    return {"inputs": ("batch", None, None), "labels": ("batch", None)}
+
+
+def decode_specs(model: Model, shape: ShapeSpec) -> Tuple[Any, Any]:
+    """(token_specs, cache_specs) for one decode step with a seq_len-deep
+    cache."""
+    cfg = model.cfg
+    B, S = shape.global_batch, shape.seq_len
+    caches = jax.eval_shape(
+        lambda: model.init_caches(B, S, dtype=jnp.bfloat16))
+    if cfg.frontend == "token":
+        tok = SDS((B,), jnp.int32)
+    else:
+        tok = SDS((B, 1, cfg.d_model), jnp.bfloat16)
+    return tok, caches
+
+
+def token_axes(cfg: ModelConfig) -> tuple:
+    return ("batch",) if cfg.frontend == "token" else ("batch", None, None)
+
+
+# ---------------------------------------------------------------- the cells
+
+@dataclasses.dataclass
+class CellProgram:
+    """Everything the dry-run needs: fn + arg specs + arg shardings."""
+    name: str
+    fn: Any
+    args_sds: Tuple[Any, ...]
+    in_shardings: Tuple[Any, ...]
+    out_shardings: Any
+    meta: Dict[str, Any]
+
+
+def _rules_for(cfg: ModelConfig, mesh: Mesh, shape: ShapeSpec,
+               scheme: str) -> Dict[str, tuple]:
+    daxes = mesh_lib.data_axes(mesh)
+    if shape.name == "long_500k":
+        rules = sh.long_context_rules(daxes)
+    elif scheme == "block":
+        rules = sh.block_parallel_rules(daxes)
+    else:
+        rules = sh.tp_rules(daxes)
+    return rules
+
+
+def make_cell(arch: str, shape_name: str, mesh: Mesh, *,
+              scheme: str = "tp", mpd_c: int = 8,
+              mpd_mode: str = "packed", q_chunk: Optional[int] = None,
+              loss_chunk: Optional[int] = None,
+              grad_accum: int = 4, mpd_fuse: bool = False) -> CellProgram:
+    """Build the (arch × shape) cell program for a mesh.
+
+    ``grad_accum``: training microbatches the global batch (sequential
+    gradient accumulation) — the standard large-batch memory lever; with
+    256×4k tokens per step the per-device activation footprint would
+    otherwise exceed HBM on several archs.
+    """
+    shape = SHAPES[shape_name]
+    over: Dict[str, Any] = dict(mpd_c=mpd_c, mpd_mode=mpd_mode,
+                                mpd_fuse=mpd_fuse)
+    # chunk sizes scale with sequence so inner-loop memory stays bounded
+    over["q_chunk"] = q_chunk or max(128, min(512, shape.seq_len // 64))
+    over["loss_chunk"] = loss_chunk or max(256, shape.seq_len // 16)
+    cfg = get_config(arch, **over)
+    model = build(cfg)
+    rules = _rules_for(cfg, mesh, shape, scheme)
+
+    params_sds = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    params_shard = tree_shardings_for(mesh, rules, model.axes(), params_sds)
+    repl = NamedSharding(mesh, P())
+
+    meta = {"arch": arch, "shape": shape_name, "kind": shape.kind,
+            "scheme": scheme, "mpd_c": mpd_c, "mpd_mode": mpd_mode,
+            "mesh": dict(zip(mesh.axis_names, mesh.devices.shape)),
+            "n_layers": cfg.n_layers, "pattern": list(cfg.pattern),
+            "q_chunk": cfg.q_chunk, "loss_chunk": cfg.loss_chunk,
+            "mpd_fuse": mpd_fuse}
+
+    if shape.kind == "train":
+        opt_cfg = OptConfig(kind="adamw", lr=1e-4)
+        opt_sds = jax.eval_shape(lambda: opt_lib.init_state(opt_cfg, params_sds))
+        opt_axes = opt_lib.state_axes(opt_cfg, model.axes())
+        opt_shard = tree_shardings_for(mesh, rules, opt_axes, opt_sds)
+        b_sds = batch_specs(cfg, shape)
+        b_shard = tree_shardings_for(mesh, rules, batch_axes(cfg), b_sds)
+
+        # cap accumulation so each microbatch still divides the batch mesh axes
+        ways = 1
+        for a in mesh_lib.data_axes(mesh):
+            ways *= mesh.shape[a]
+        accum = max(grad_accum, 1)
+        while accum > 1 and (shape.global_batch % accum
+                             or (shape.global_batch // accum) % ways):
+            accum -= 1
+        meta["grad_accum"] = accum
+
+        def train_step(params, opt_state, batch):
+            with sh.use_mesh_rules(mesh, rules):
+                if accum > 1:
+                    mb = shape.global_batch // accum
+                    # microbatch via reshape + scan-over-xs: scan's static
+                    # leading-axis slicing preserves GSPMD batch sharding
+                    # (a traced dynamic_slice on the sharded batch axis
+                    # would force an all-gather of the whole batch).
+                    mbs = jax.tree.map(
+                        lambda x: sh.shard(
+                            x.reshape((accum, mb) + x.shape[1:]),
+                            None, "batch", *([None] * (x.ndim - 1))),
+                        batch)
+
+                    def acc_body(g_acc, sub):
+                        l, g = jax.value_and_grad(model.train_loss)(params, sub)
+                        g_acc = jax.tree.map(lambda a, b: a + b / accum,
+                                             g_acc, g)
+                        return g_acc, l / accum
+
+                    zeros = jax.tree.map(
+                        lambda p: jnp.zeros(p.shape, p.dtype), params)
+                    grads, losses = jax.lax.scan(acc_body, zeros, mbs)
+                    loss = losses.sum()
+                else:
+                    loss, grads = jax.value_and_grad(model.train_loss)(
+                        params, batch)
+                params, opt_state, metrics = opt_lib.apply_updates(
+                    opt_cfg, params, grads, opt_state)
+            return params, opt_state, loss
+
+        return CellProgram(
+            name=f"{arch}:{shape_name}", fn=train_step,
+            args_sds=(params_sds, opt_sds, b_sds),
+            in_shardings=(params_shard, opt_shard, b_shard),
+            out_shardings=(params_shard, opt_shard, repl),
+            meta=meta,
+        )
+
+    if shape.kind == "prefill":
+        b_sds = batch_specs(cfg, shape)["inputs"]
+        b_shard = tree_shardings_for(
+            mesh, rules, {"x": batch_axes(cfg)["inputs"]}, {"x": b_sds})["x"]
+        cache_sds = jax.eval_shape(
+            lambda: model.init_caches(shape.global_batch, shape.seq_len,
+                                      dtype=jnp.bfloat16))
+        cache_shard = tree_shardings_for(mesh, rules, model.cache_axes(),
+                                         cache_sds)
+
+        def prefill_step(params, inputs, caches):
+            with sh.use_mesh_rules(mesh, rules):
+                return model.prefill(params, inputs, caches)
+
+        return CellProgram(
+            name=f"{arch}:{shape_name}", fn=prefill_step,
+            args_sds=(params_sds, b_sds, cache_sds),
+            in_shardings=(params_shard, b_shard, cache_shard),
+            out_shardings=(repl, cache_shard),
+            meta=meta,
+        )
+
+    # decode
+    tok_sds, cache_sds = decode_specs(model, shape)
+    cache_shard = tree_shardings_for(mesh, rules, model.cache_axes(), cache_sds)
+    tok_shard = tree_shardings_for(
+        mesh, rules, {"t": token_axes(cfg)}, {"t": tok_sds})["t"]
+
+    def serve_step(params, tokens, caches):
+        with sh.use_mesh_rules(mesh, rules):
+            return model.decode_step(params, tokens, caches)
+
+    return CellProgram(
+        name=f"{arch}:{shape_name}", fn=serve_step,
+        args_sds=(params_sds, tok_sds, cache_sds),
+        in_shardings=(params_shard, tok_shard, cache_shard),
+        out_shardings=(NamedSharding(mesh, P()), cache_shard),
+        meta=meta,
+    )

@@ -1,0 +1,71 @@
+"""Dry-run sweep driver: every runnable (arch × shape) cell on both meshes,
+one subprocess per cell (isolates compiler memory), JSON per cell.
+
+    PYTHONPATH=src python -m repro.launch.sweep --out results/dryrun
+"""
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+
+
+def main():
+    p = argparse.ArgumentParser()
+    p.add_argument("--out", default="results/dryrun")
+    p.add_argument("--scheme", default="tp")
+    p.add_argument("--mpd-mode", default="packed")
+    p.add_argument("--mpd-c", type=int, default=8)
+    p.add_argument("--only-arch", default="")
+    p.add_argument("--skip-multipod", action="store_true")
+    p.add_argument("--skip-calibration", action="store_true")
+    args = p.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    from repro.configs.common import all_cells
+    jobs = []
+    for arch, shape, ok, why in all_cells():
+        if args.only_arch and arch != args.only_arch:
+            continue
+        for multi in ((False, True) if not args.skip_multipod else (False,)):
+            jobs.append((arch, shape, multi, ok, why))
+
+    for i, (arch, shape, multi, ok, why) in enumerate(jobs):
+        tag = f"{arch}__{shape}__{'2x16x16' if multi else '16x16'}__{args.scheme}__{args.mpd_mode}"
+        out = os.path.join(args.out, tag + ".json")
+        if os.path.exists(out):
+            print(f"[{i+1}/{len(jobs)}] {tag}: cached", flush=True)
+            continue
+        if not ok:
+            with open(out, "w") as f:
+                json.dump({"arch": arch, "shape": shape,
+                           "mesh": "2x16x16" if multi else "16x16",
+                           "scheme": args.scheme, "mpd_mode": args.mpd_mode,
+                           "status": "skipped", "reason": why}, f, indent=2)
+            print(f"[{i+1}/{len(jobs)}] {tag}: skipped ({why})", flush=True)
+            continue
+        cmd = [sys.executable, "-m", "repro.launch.dryrun",
+               "--arch", arch, "--shape", shape, "--scheme", args.scheme,
+               "--mpd-mode", args.mpd_mode, "--mpd-c", str(args.mpd_c),
+               "--out", out]
+        if multi:
+            cmd += ["--multi-pod", "--skip-calibration"]
+        if args.skip_calibration:
+            cmd += ["--skip-calibration"]
+        t0 = time.time()
+        r = subprocess.run(cmd, capture_output=True, text=True, timeout=3600)
+        status = "?"
+        if os.path.exists(out):
+            with open(out) as f:
+                status = json.load(f).get("status")
+        print(f"[{i+1}/{len(jobs)}] {tag}: {status} rc={r.returncode} "
+              f"({time.time()-t0:.0f}s)", flush=True)
+        if r.returncode and not os.path.exists(out):
+            with open(out + ".err", "w") as f:
+                f.write(r.stdout[-3000:] + "\n" + r.stderr[-6000:])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+"""Model zoo: the 10 assigned architectures as composable JAX modules."""
+
+from .model import Model, ModelConfig, build  # noqa: F401

@@ -1,0 +1,211 @@
+"""Attention for the model zoo: GQA/MHA, RoPE/M-RoPE, chunked (memory-
+efficient) training attention, KV-cache decode, and sequence-parallel-
+friendly softmax (partial reductions are plain jnp reductions, so GSPMD
+inserts the log-sum-exp combine collectives when the KV sequence axis is
+sharded — used by the ``long_500k`` cells).
+
+All projections route through :class:`repro.models.linear.Linear`, i.e. they
+are MPD-compressible (paper's FC layers).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.policy import CompressionPolicy
+from repro.dist.sharding import shard
+from . import layers
+from .linear import Linear
+
+
+@dataclasses.dataclass(frozen=True)
+class AttentionSpec:
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    causal: bool = True
+    rope: str = "rope"  # rope | mrope | none
+    rope_theta: float = 10000.0
+    mrope_sections: Tuple[int, int, int] = (16, 24, 24)
+    q_chunk: int = 128
+    use_bias: bool = False
+    wq: Linear = None
+    wk: Linear = None
+    wv: Linear = None
+    wo: Linear = None
+
+    @staticmethod
+    def make(policy: CompressionPolicy, d_model, n_heads, n_kv_heads, head_dim,
+             *, causal=True, rope="rope", rope_theta=1e4,
+             mrope_sections=(16, 24, 24), q_chunk=128, use_bias=False,
+             seed_salt=0, fuse_perms=False) -> "AttentionSpec":
+        mk = functools.partial(Linear.make, policy, use_bias=use_bias)
+        kw_q = dict(seed_salt=seed_salt * 4 + 0, axes=("embed", "heads"))
+        kw_k = dict(seed_salt=seed_salt * 4 + 1, axes=("embed", "heads"))
+        kw_v = dict(seed_salt=seed_salt * 4 + 2, axes=("embed", "heads"))
+        if fuse_perms:
+            # share the INPUT permutation across q/k/v so the three pack
+            # gathers CSE into one (output perms stay independent; rope and
+            # head structure need natural output order, so no skip there).
+            from repro.core.mask import make_mask_spec
+            mq = policy.plan(d_model, n_heads * head_dim, "attn_qkv",
+                             seed_salt=seed_salt * 4 + 0)
+            if mq is not None:
+                for kw, d_out, salt in ((kw_k, n_kv_heads * head_dim, 1),
+                                        (kw_v, n_kv_heads * head_dim, 2)):
+                    m = policy.plan(d_model, d_out, "attn_qkv",
+                                    seed_salt=seed_salt * 4 + salt)
+                    if m is not None and m.nb == mq.nb:
+                        kw["mask_override"] = make_mask_spec(
+                            d_model, d_out, m.nb, seed=m.seed,
+                            in_perm=mq.in_perm, out_perm=m.out_perm)
+        return AttentionSpec(
+            d_model, n_heads, n_kv_heads, head_dim, causal, rope, rope_theta,
+            tuple(mrope_sections), q_chunk, use_bias,
+            wq=mk(d_model, n_heads * head_dim, "attn_qkv", **kw_q),
+            wk=mk(d_model, n_kv_heads * head_dim, "attn_qkv", **kw_k),
+            wv=mk(d_model, n_kv_heads * head_dim, "attn_qkv", **kw_v),
+            wo=mk(n_heads * head_dim, d_model, "attn_out",
+                  seed_salt=seed_salt * 4 + 3, axes=("heads", "embed")),
+        )
+
+    def init(self, key, dtype=jnp.float32):
+        ks = jax.random.split(key, 4)
+        return {
+            "wq": self.wq.init(ks[0], dtype), "wk": self.wk.init(ks[1], dtype),
+            "wv": self.wv.init(ks[2], dtype), "wo": self.wo.init(ks[3], dtype),
+        }
+
+    def axes(self):
+        return {"wq": self.wq.axes(), "wk": self.wk.axes(),
+                "wv": self.wv.axes(), "wo": self.wo.axes()}
+
+
+def _cos_sin(spec: AttentionSpec, positions):
+    if spec.rope == "mrope":
+        return layers.mrope_cos_sin(positions, spec.head_dim, spec.mrope_sections,
+                                    spec.rope_theta)
+    if spec.rope == "rope":
+        return layers.rope_cos_sin(positions, spec.head_dim, spec.rope_theta)
+    return None, None
+
+
+def _qkv(spec: AttentionSpec, params, x, positions):
+    B, T, _ = x.shape
+    q = spec.wq.apply(params["wq"], x).reshape(B, T, spec.n_heads, spec.head_dim)
+    k = spec.wk.apply(params["wk"], x).reshape(B, T, spec.n_kv_heads, spec.head_dim)
+    v = spec.wv.apply(params["wv"], x).reshape(B, T, spec.n_kv_heads, spec.head_dim)
+    cos, sin = _cos_sin(spec, positions)
+    if cos is not None:
+        q = layers.apply_rope(q, cos, sin)
+        k = layers.apply_rope(k, cos, sin)
+    # anchor head sharding after the reshape (MPD unpack gathers otherwise
+    # leave the propagation unsharded and attention runs model-replicated);
+    # shard() drops indivisible assignments (e.g. 8 KV heads on 16 devices),
+    # i.e. GQA KV is replicated across TP — standard practice.
+    q = shard(q, "batch", None, "heads", None)
+    k = shard(k, "batch", None, "kv_heads", None)
+    v = shard(v, "batch", None, "kv_heads", None)
+    return q, k, v
+
+
+def _attend(q, k, v, q_pos, kv_valid, causal):
+    """Core attention for one query block against the full K/V.
+
+    q: (B, Tq, H, Dh); k/v: (B, S, Kh, Dh); q_pos: (Tq,) global positions;
+    kv_valid: (B, S) bool or None. Softmax in f32. GQA via head grouping.
+    """
+    B, Tq, H, Dh = q.shape
+    S, Kh = k.shape[1], k.shape[2]
+    g = H // Kh
+    q5 = q.reshape(B, Tq, Kh, g, Dh)
+    logits = jnp.einsum("bqkgd,bskd->bkgqs", q5, k).astype(jnp.float32)
+    logits *= Dh ** -0.5
+    if causal:
+        kv_pos = jnp.arange(S)
+        cmask = q_pos[:, None] >= kv_pos[None, :]  # (Tq, S)
+        logits = jnp.where(cmask[None, None, None], logits, -1e30)
+    if kv_valid is not None:
+        logits = jnp.where(kv_valid[:, None, None, None, :], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", p.astype(v.dtype), v)
+    o = o.reshape(B, Tq, H, Dh)
+    return shard(o, "batch", None, "heads", None)
+
+
+def attend_full(spec: AttentionSpec, q, k, v, *, base_pos: int = 0):
+    """Training/prefill attention, chunked over the query axis.
+
+    The chunk loop is a carry-free ``lax.map`` with a rematerialized body, so
+    peak activation memory is O(Tq_chunk × S) instead of O(T²) and the
+    backward pass recomputes per-chunk logits (flash-style dataflow in pure
+    JAX — the TPU adaptation of memory-efficient attention).
+    """
+    B, T, H, Dh = q.shape
+    cq = spec.q_chunk
+    if T <= cq or T % cq != 0:
+        return _attend(q, k, v, base_pos + jnp.arange(T), None, spec.causal)
+    nq = T // cq
+    qc = jnp.moveaxis(q.reshape(B, nq, cq, H, Dh), 1, 0)  # (nq, B, cq, H, Dh)
+
+    @jax.checkpoint
+    def body(args):
+        qi, i = args
+        pos = base_pos + i * cq + jnp.arange(cq)
+        return _attend(qi, k, v, pos, None, spec.causal)
+
+    oc = jax.lax.map(body, (qc, jnp.arange(nq)))
+    return jnp.moveaxis(oc, 0, 1).reshape(B, T, H, Dh)
+
+
+def apply_train(spec: AttentionSpec, params, x, positions=None):
+    """Full-sequence attention (training / prefill). x: (B, T, D)."""
+    B, T, _ = x.shape
+    if positions is None:
+        if spec.rope == "mrope":
+            p1 = jnp.broadcast_to(jnp.arange(T)[None], (B, T))
+            positions = jnp.stack([p1, p1, p1])  # text-only: t==h==w ids
+        else:
+            positions = jnp.broadcast_to(jnp.arange(T)[None], (B, T))
+    q, k, v = _qkv(spec, params, x, positions)
+    o = attend_full(spec, q, k, v)
+    return spec.wo.apply(params["wo"], o.reshape(B, T, spec.n_heads * spec.head_dim))
+
+
+def init_cache(spec: AttentionSpec, batch: int, max_len: int, dtype=jnp.bfloat16):
+    shape = (batch, max_len, spec.n_kv_heads, spec.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype),
+            "pos": jnp.zeros((), jnp.int32)}
+
+
+def apply_decode(spec: AttentionSpec, params, x, cache):
+    """One decode step. x: (B, 1, D); cache K/V: (B, S, Kh, Dh).
+
+    When the cache's S axis is sharded (long-context cells), the f32 softmax
+    reductions below are partitioned by GSPMD into per-shard partials plus an
+    all-reduce — the flash-decoding combine, derived not hand-rolled.
+    """
+    B, T, _ = x.shape
+    assert T == 1
+    pos = cache["pos"]
+    if spec.rope == "mrope":
+        p = jnp.broadcast_to(pos[None, None], (B, 1))
+        positions = jnp.stack([p, p, p])
+    else:
+        positions = jnp.broadcast_to(pos[None, None], (B, 1))
+    q, k_new, v_new = _qkv(spec, params, x, positions)
+    k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new.astype(cache["k"].dtype), pos, axis=1)
+    v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new.astype(cache["v"].dtype), pos, axis=1)
+    S = k.shape[1]
+    kv_valid = jnp.broadcast_to((jnp.arange(S) <= pos)[None], (B, S))
+    o = _attend(q, k.astype(q.dtype), v.astype(q.dtype),
+                jnp.full((1,), pos), kv_valid, causal=False)
+    y = spec.wo.apply(params["wo"], o.reshape(B, 1, spec.n_heads * spec.head_dim))
+    new_cache = {"k": k, "v": v, "pos": pos + 1}
+    return y, new_cache

@@ -1,0 +1,97 @@
+"""Feed-forward blocks (dense MLPs) — the paper's primary compression target.
+
+Supports gated (SwiGLU/GeGLU) and plain (GELU/ReLU) MLPs; every projection is
+an MPD-compressible :class:`Linear`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.policy import CompressionPolicy
+from .linear import Linear
+
+
+@dataclasses.dataclass(frozen=True)
+class FFNSpec:
+    d_model: int
+    d_ff: int
+    kind: str = "swiglu"  # swiglu | gelu | relu
+    use_bias: bool = False
+    w_up: Linear = None
+    w_gate: Linear = None  # None for non-gated kinds
+    w_down: Linear = None
+
+    @staticmethod
+    def make(policy: CompressionPolicy, d_model, d_ff, kind="swiglu",
+             use_bias=False, seed_salt=0, fuse_perms=False) -> "FFNSpec":
+        """``fuse_perms`` (beyond-paper §Perf; mechanism from paper Fig 3):
+        up/gate share one mask (one input gather, outputs stay in packed
+        order — valid because the elementwise gate commutes with any fixed
+        permutation) and down's input permutation is chosen as the inverse
+        of up's output permutation, so the d_ff-sized inner gathers vanish
+        and the hidden activation never leaves block order (no reshard)."""
+        gated = kind == "swiglu"
+        if not fuse_perms:
+            return FFNSpec(
+                d_model, d_ff, kind, use_bias,
+                w_up=Linear.make(policy, d_model, d_ff, "mlp", use_bias=use_bias,
+                                 seed_salt=seed_salt * 3 + 0, axes=("embed", "ffn")),
+                w_gate=(Linear.make(policy, d_model, d_ff, "mlp", use_bias=use_bias,
+                                    seed_salt=seed_salt * 3 + 1, axes=("embed", "ffn"))
+                        if gated else None),
+                w_down=Linear.make(policy, d_ff, d_model, "mlp", use_bias=use_bias,
+                                   seed_salt=seed_salt * 3 + 2, axes=("ffn", "embed")),
+            )
+        import numpy as _np
+        from repro.core.mask import make_mask_spec
+        from repro.core import permute as _perm
+        m_up = policy.plan(d_model, d_ff, "mlp", seed_salt=seed_salt * 3 + 0)
+        m_down = policy.plan(d_ff, d_model, "mlp", seed_salt=seed_salt * 3 + 2)
+        if m_up is not None and m_down is not None and m_up.nb == m_down.nb:
+            m_down = make_mask_spec(d_ff, d_model, m_down.nb,
+                                    seed=m_down.seed,
+                                    in_perm=m_up.out_perm,   # cancels
+                                    out_perm=m_down.out_perm)
+            up = Linear.make(policy, d_model, d_ff, "mlp", use_bias=use_bias,
+                             axes=("embed", "ffn"), mask_override=m_up,
+                             skip_out_perm=True)
+            gate = (Linear.make(policy, d_model, d_ff, "mlp", use_bias=use_bias,
+                                axes=("embed", "ffn"), mask_override=m_up,
+                                skip_out_perm=True) if gated else None)
+            down = Linear.make(policy, d_ff, d_model, "mlp", use_bias=use_bias,
+                               axes=("ffn", "embed"), mask_override=m_down,
+                               skip_in_perm=True)
+            return FFNSpec(d_model, d_ff, kind, use_bias, up, gate, down)
+        return FFNSpec.make(policy, d_model, d_ff, kind, use_bias, seed_salt,
+                            fuse_perms=False)
+
+    def init(self, key, dtype=jnp.float32):
+        ks = jax.random.split(key, 3)
+        p = {"w_up": self.w_up.init(ks[0], dtype),
+             "w_down": self.w_down.init(ks[2], dtype)}
+        if self.w_gate is not None:
+            p["w_gate"] = self.w_gate.init(ks[1], dtype)
+        return p
+
+    def axes(self):
+        a = {"w_up": self.w_up.axes(), "w_down": self.w_down.axes()}
+        if self.w_gate is not None:
+            a["w_gate"] = self.w_gate.axes()
+        return a
+
+    def apply(self, params, x):
+        h = self.w_up.apply(params["w_up"], x)
+        if self.kind == "swiglu":
+            g = self.w_gate.apply(params["w_gate"], x)
+            h = jax.nn.silu(g) * h
+        elif self.kind == "gelu":
+            h = jax.nn.gelu(h)
+        elif self.kind == "relu":
+            h = jnp.maximum(h, 0)
+        else:
+            raise ValueError(self.kind)
+        return self.w_down.apply(params["w_down"], h)

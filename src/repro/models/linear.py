@@ -1,0 +1,95 @@
+"""Projection layer: every dense matmul in the zoo goes through here, so the
+MPDCompress policy can claim any of them (paper: "masks are applied to the
+corresponding FC layers"; here FC == any projection).
+
+A ``Linear`` is (static spec, params). The spec carries the MPD mask (or
+None for dense) and is resolved once at model-build time from the
+:class:`repro.core.policy.CompressionPolicy`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import mpd
+from repro.core.policy import CompressionPolicy
+
+
+@dataclasses.dataclass(frozen=True)
+class Linear:
+    spec: mpd.MPDLinearSpec
+    in_axis: Optional[str] = None   # logical name of d_in (sharding metadata)
+    out_axis: Optional[str] = None  # logical name of d_out
+
+    @staticmethod
+    def make(
+        policy: CompressionPolicy,
+        d_in: int,
+        d_out: int,
+        kind: str,
+        *,
+        mode: Optional[str] = None,
+        use_bias: bool = False,
+        seed_salt: int = 0,
+        axes=(None, None),
+        mask_override=None,
+        skip_in_perm: bool = False,
+        skip_out_perm: bool = False,
+    ) -> "Linear":
+        """``mask_override`` + the skip flags implement the paper's Fig 3
+        permutation fusion: adjacent layers choose masks whose permutations
+        cancel, and the runtime gathers are skipped (packed-order
+        activations flow straight between block-diagonal matmuls)."""
+        mask = mask_override if mask_override is not None else policy.plan(
+            d_in, d_out, kind, seed_salt=seed_salt)
+        m = (mode or policy_default_mode(policy)) if mask is not None else "dense"
+        return Linear(
+            mpd.MPDLinearSpec(d_in, d_out, mask, mode=m, use_bias=use_bias,
+                              skip_in_perm=skip_in_perm and m == "packed",
+                              skip_out_perm=skip_out_perm and m == "packed"),
+            in_axis=axes[0], out_axis=axes[1])
+
+    def init(self, key, dtype=jnp.float32):
+        return mpd.init(key, self.spec, dtype)
+
+    def apply(self, params, x):
+        y = mpd.apply(self.spec, params, x)
+        if self.out_axis is not None and y.ndim >= 2:
+            # re-anchor GSPMD propagation on (batch, ..., out_axis) — the MPD
+            # pack/unpack gathers otherwise leave the activation unsharded
+            # and downstream ops run model-axis-replicated. NB a constraint's
+            # None dims mean *replicated*, so 'batch' must be restated here
+            # or the constraint itself would unshard the batch.
+            from repro.dist.sharding import shard
+            y = shard(y, "batch", *([None] * (y.ndim - 2) + [self.out_axis]))
+        return y
+
+    def axes(self):
+        """Logical axis names per param leaf (mirrors :meth:`init` structure)."""
+        s = self.spec
+        if s.mask is None or s.mode == "dense" or s.mode == "masked_dense":
+            p = {"w": (self.in_axis, self.out_axis)}
+        else:  # packed (nb, bi, bo): shard the block axis
+            p = {"w": ("blocks", None, None)}
+        if s.use_bias:
+            p["b"] = (self.out_axis,)
+        return p
+
+    def param_count(self) -> int:
+        return self.spec.param_count()
+
+
+def policy_default_mode(policy: CompressionPolicy) -> str:
+    """Training mode selected by the policy object (paper-faithful
+    ``masked_dense`` vs beyond-paper ``packed``)."""
+    return policy.mode
+
+
+def stacked_init(lin: Linear, key, n: int, dtype=jnp.float32):
+    """Init ``n`` stacked copies (for scan-over-layers parameter stacking)."""
+    keys = jax.random.split(key, n)
+    return jax.vmap(lambda k: lin.init(k, dtype))(keys)

@@ -1,0 +1,130 @@
+"""Mamba (S6) selective-state-space block for the Jamba hybrid
+(arXiv:2403.19887 uses Mamba-1 layers, arXiv:2312.00752).
+
+    h_t = exp(A Δ_t) h_{t-1} + Δ_t B_t x_t         h: (d_inner, d_state)
+    y_t = C_t · h_t + D x_t
+
+in/x/dt/out projections are MPD-compressible dense matmuls. The scan is O(T)
+with O(1) state, so Jamba's ``long_500k`` decode keeps only (conv window,
+ssm state) per layer.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.policy import CompressionPolicy
+from .linear import Linear
+
+
+@dataclasses.dataclass(frozen=True)
+class MambaSpec:
+    d_model: int
+    d_inner: int
+    d_state: int = 16
+    d_conv: int = 4
+    dt_rank: int = 0
+    w_in: Linear = None    # D -> 2*d_inner (x | z)
+    w_x: Linear = None     # d_inner -> dt_rank + 2*d_state
+    w_dt: Linear = None    # dt_rank -> d_inner
+    w_out: Linear = None   # d_inner -> D
+
+    @staticmethod
+    def make(policy: CompressionPolicy, d_model, expand=2, d_state=16,
+             d_conv=4, seed_salt=0) -> "MambaSpec":
+        d_inner = expand * d_model
+        dt_rank = max(1, d_model // 16)
+        mk = lambda i, a, b, axes=(None, None): Linear.make(
+            policy, a, b, "ssm_proj", seed_salt=seed_salt * 13 + i, axes=axes)
+        return MambaSpec(
+            d_model, d_inner, d_state, d_conv, dt_rank,
+            w_in=mk(0, d_model, 2 * d_inner, axes=("embed", "inner")),
+            w_x=mk(1, d_inner, dt_rank + 2 * d_state, axes=("inner", None)),
+            w_dt=mk(2, dt_rank, d_inner, axes=(None, "inner")),
+            w_out=mk(3, d_inner, d_model, axes=("inner", "embed")),
+        )
+
+    def init(self, key, dtype=jnp.float32):
+        ks = jax.random.split(key, 6)
+        di, ds, dc = self.d_inner, self.d_state, self.d_conv
+        return {
+            "w_in": self.w_in.init(ks[0], dtype),
+            "w_x": self.w_x.init(ks[1], dtype),
+            "w_dt": self.w_dt.init(ks[2], dtype),
+            "w_out": self.w_out.init(ks[3], dtype),
+            "conv": jax.random.normal(ks[4], (dc, di), dtype) * float(1 / np.sqrt(dc)),
+            "conv_b": jnp.zeros((di,), dtype),
+            "A_log": jnp.log(jnp.broadcast_to(
+                jnp.arange(1, ds + 1, dtype=jnp.float32), (di, ds))),
+            "D": jnp.ones((di,), dtype),
+            "dt_bias": jnp.zeros((di,), dtype),
+        }
+
+    def axes(self):
+        return {
+            "w_in": self.w_in.axes(), "w_x": self.w_x.axes(),
+            "w_dt": self.w_dt.axes(), "w_out": self.w_out.axes(),
+            "conv": (None, "inner"), "conv_b": ("inner",),
+            "A_log": ("inner", None), "D": ("inner",), "dt_bias": ("inner",),
+        }
+
+    def _ssm_inputs(self, params, xc):
+        """xc: (B, T, d_inner) post-conv activations -> (dt, Bm, Cm)."""
+        proj = self.w_x.apply(params["w_x"], xc)
+        dt, Bm, Cm = jnp.split(proj, [self.dt_rank, self.dt_rank + self.d_state],
+                               axis=-1)
+        dt = jax.nn.softplus(self.w_dt.apply(params["w_dt"], dt)
+                             + params["dt_bias"])        # (B,T,di)
+        return dt, Bm, Cm
+
+    def apply(self, params, x, state=None):
+        """x: (B,T,D). state (decode): {'conv': (B,dc-1,di), 'h': (B,di,ds)}.
+
+        Returns (y, new_state). Full-sequence mode (state=None) starts from
+        zeros and also returns the final state (used by prefill).
+        """
+        B, T, D = x.shape
+        di, ds, dc = self.d_inner, self.d_state, self.d_conv
+        xz = self.w_in.apply(params["w_in"], x)
+        xr, z = jnp.split(xz, 2, axis=-1)                 # (B,T,di) each
+
+        conv_state = (state["conv"] if state is not None
+                      else jnp.zeros((B, dc - 1, di), x.dtype))
+        xpad = jnp.concatenate([conv_state, xr], axis=1)  # causal depthwise conv
+        xc = sum(xpad[:, i : i + T] * params["conv"][i] for i in range(dc))
+        xc = jax.nn.silu(xc + params["conv_b"])
+        new_conv = xpad[:, T:]                             # last dc-1 inputs
+
+        dt, Bm, Cm = self._ssm_inputs(params, xc)
+        A = -jnp.exp(params["A_log"])                      # (di, ds)
+        h0 = (state["h"] if state is not None
+              else jnp.zeros((B, di, ds), jnp.float32))
+
+        def step(h, inp):
+            xc_t, dt_t, b_t, c_t = inp                     # (B,di),(B,di),(B,ds),(B,ds)
+            dA = jnp.exp(dt_t[..., None] * A)              # (B,di,ds)
+            dBx = dt_t[..., None] * b_t[:, None, :] * xc_t[..., None]
+            h = dA * h + dBx
+            y = jnp.einsum("bds,bs->bd", h, c_t)
+            return h, y
+
+        seq = (jnp.moveaxis(xc, 1, 0).astype(jnp.float32),
+               jnp.moveaxis(dt, 1, 0).astype(jnp.float32),
+               jnp.moveaxis(Bm, 1, 0).astype(jnp.float32),
+               jnp.moveaxis(Cm, 1, 0).astype(jnp.float32))
+        h, ys = jax.lax.scan(step, h0, seq)
+        y = jnp.moveaxis(ys, 0, 1).astype(x.dtype)         # (B,T,di)
+        y = y + xc * params["D"]
+        y = y * jax.nn.silu(z)
+        out = self.w_out.apply(params["w_out"], y)
+        return out, {"conv": new_conv, "h": h}
+
+    def init_state(self, batch: int, dtype=jnp.bfloat16):
+        return {
+            "conv": jnp.zeros((batch, self.d_conv - 1, self.d_inner), dtype),
+            "h": jnp.zeros((batch, self.d_inner, self.d_state), jnp.float32),
+        }

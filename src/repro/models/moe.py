@@ -1,0 +1,193 @@
+"""Mixture-of-Experts with capacity-bounded scatter dispatch (TPU/GSPMD
+friendly: no ragged shapes) + optional shared experts + MPD-compressed expert
+weights.
+
+Dispatch is the scatter formulation (O(tokens·d) memory, unlike the GShard
+(T,E,C) one-hot einsum which is O(T·E·C)): each routed (token, choice) gets a
+``slot = expert·C + position_in_expert`` computed with a cumsum over the
+one-hot assignment matrix; tokens past capacity are dropped (standard
+Switch/GShard semantics, capacity_factor configurable).
+
+MPD on experts: the paper prescribes one mask per FC layer; we accordingly
+share one mask across all experts of a layer (each expert's weight is packed
+with the same block/permutation geometry), which keeps dispatch layout-
+independent and lets the packed einsum shard over both the expert axis (EP)
+and the block axis (beyond-paper block-parallelism).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import fold as fold_lib
+from repro.core import permute
+from repro.core.mask import MaskSpec
+from repro.core.policy import CompressionPolicy
+from repro.dist.sharding import shard
+from .ffn import FFNSpec
+from .linear import Linear
+
+
+@dataclasses.dataclass(frozen=True)
+class MoESpec:
+    d_model: int
+    d_ff: int               # per-expert hidden
+    n_experts: int          # routed experts the router scores
+    top_k: int
+    n_experts_padded: int = 0  # physical expert count (>= n_experts), padded
+                               # to a mesh-divisible size; pads get no traffic
+    capacity_factor: float = 1.25
+    gated: bool = True      # swiglu experts
+    router: Linear = None
+    # one shared MPD mask geometry for all experts (paper: one mask per layer)
+    mask_up: Optional[MaskSpec] = None
+    mask_down: Optional[MaskSpec] = None
+    mode: str = "packed"
+    # optional always-on shared expert (qwen2-moe: 4 fused => d_ff_shared)
+    shared: Optional[FFNSpec] = None
+    shared_gated: bool = False  # sigmoid gate on the shared branch (qwen2-moe)
+    w_shared_gate: Optional[Linear] = None
+
+    @staticmethod
+    def make(policy: CompressionPolicy, d_model, d_ff, n_experts, top_k,
+             *, capacity_factor=1.25, d_ff_shared=0, shared_gated=False,
+             mode="packed", seed_salt=0, n_experts_padded=0) -> "MoESpec":
+        mask_up = policy.plan(d_model, d_ff, "moe_expert", seed_salt=seed_salt * 7 + 1)
+        mask_down = policy.plan(d_ff, d_model, "moe_expert", seed_salt=seed_salt * 7 + 2)
+        shared = None
+        w_sg = None
+        if d_ff_shared:
+            shared = FFNSpec.make(policy, d_model, d_ff_shared, "swiglu",
+                                  seed_salt=seed_salt * 7 + 3)
+            if shared_gated:
+                w_sg = Linear.make(policy, d_model, 1, "head", seed_salt=0)  # stays dense
+        return MoESpec(
+            d_model, d_ff, n_experts, top_k,
+            max(n_experts_padded, n_experts), capacity_factor, True,
+            router=Linear.make(policy, d_model, n_experts, "head",
+                               seed_salt=seed_salt * 7),  # router stays dense
+            mask_up=mask_up if mode != "dense" else None,
+            mask_down=mask_down if mode != "dense" else None,
+            mode=mode, shared=shared, shared_gated=shared_gated, w_shared_gate=w_sg,
+        )
+
+    # --- params -----------------------------------------------------------
+    def _expert_shape(self, mask: Optional[MaskSpec], d_in, d_out):
+        ep = self.n_experts_padded
+        if mask is None or self.mode in ("dense", "masked_dense"):
+            return (ep, d_in, d_out)
+        return (ep, mask.nb, mask.block_in, mask.block_out)
+
+    def init(self, key, dtype=jnp.float32):
+        ks = jax.random.split(key, 6)
+        scale_up = float(1.0 / np.sqrt(self.d_model))
+        scale_dn = float(1.0 / np.sqrt(self.d_ff))
+        p = {
+            "router": self.router.init(ks[0], jnp.float32),  # router in f32
+            "w_up": jax.random.normal(ks[1], self._expert_shape(self.mask_up, self.d_model, self.d_ff), dtype) * scale_up,
+            "w_gate": jax.random.normal(ks[2], self._expert_shape(self.mask_up, self.d_model, self.d_ff), dtype) * scale_up,
+            "w_down": jax.random.normal(ks[3], self._expert_shape(self.mask_down, self.d_ff, self.d_model), dtype) * scale_dn,
+        }
+        if self.shared is not None:
+            p["shared"] = self.shared.init(ks[4], dtype)
+            if self.w_shared_gate is not None:
+                p["shared_gate"] = self.w_shared_gate.init(ks[5], dtype)
+        return p
+
+    def axes(self):
+        def ax(mask, a, b):
+            if mask is None or self.mode in ("dense", "masked_dense"):
+                return ("experts", a, b)
+            return ("experts", "blocks", None, None)
+        a = {
+            "router": self.router.axes(),
+            "w_up": ax(self.mask_up, "embed", "ffn"),
+            "w_gate": ax(self.mask_up, "embed", "ffn"),
+            "w_down": ax(self.mask_down, "ffn", "embed"),
+        }
+        if self.shared is not None:
+            a["shared"] = self.shared.axes()
+            if self.w_shared_gate is not None:
+                a["shared_gate"] = self.w_shared_gate.axes()
+        return a
+
+    # --- expert matmuls (dense, masked-dense, or packed block-diagonal) ----
+    def _expert_mm(self, x, w, mask: Optional[MaskSpec]):
+        """x: (E, C, d_in); w: dense (E, d_in, d_out) or packed (E, nb, bi, bo)."""
+        if mask is None or self.mode == "dense":
+            return jnp.einsum("ecd,edf->ecf", x, w)
+        if self.mode == "masked_dense":  # paper-faithful Fig 2 path
+            from repro.core.mask import mask_dense
+            m = jnp.asarray(mask_dense(mask), w.dtype)
+            return jnp.einsum("ecd,edf->ecf", x, w * m)
+        xp = fold_lib.pack_inputs(mask, x)  # gather cols into block order
+        E, C, _ = xp.shape
+        xb = xp.reshape(E, C, mask.nb, mask.block_in)
+        yb = jnp.einsum("ecnk,enko->ecno", xb, w)
+        y = yb.reshape(E, C, mask.nb * mask.block_out)
+        return fold_lib.unpack_outputs(mask, y)
+
+    # --- forward ------------------------------------------------------------
+    def apply(self, params, x):
+        """x: (B, T, D) -> (y, aux) with aux = load-balance loss terms."""
+        B, T, D = x.shape
+        t = B * T
+        xf = x.reshape(t, D)
+        E, K = self.n_experts_padded, self.top_k
+        C = max(1, int(np.ceil(t * K / self.n_experts * self.capacity_factor)))
+
+        xf = shard(xf, "batch", None)
+        logits = self.router.apply(params["router"], xf.astype(jnp.float32))
+        probs = jax.nn.softmax(logits, axis=-1)                      # (t, E)
+        gate_vals, ids = jax.lax.top_k(probs, K)                     # (t, K)
+        gate_vals = gate_vals / (gate_vals.sum(-1, keepdims=True) + 1e-9)
+
+        flat_ids = ids.reshape(t * K)                                 # (tK,)
+        flat_gate = gate_vals.reshape(t * K)
+        # position-in-expert via exact int32 cumsum over the one-hot matrix
+        oh = jax.nn.one_hot(flat_ids, E, dtype=jnp.int32)             # (tK, E)
+        pos = jnp.cumsum(oh, axis=0) - 1
+        pos = jnp.sum(pos * oh, axis=-1)                              # (tK,)
+        keep = pos < C
+        # dropped (over-capacity) tokens scatter *zeros* into the last slot,
+        # so no +1 overflow row is needed and (E, C, D) stays expert-shardable
+        slot = jnp.where(keep, flat_ids * C + jnp.minimum(pos, C - 1), E * C - 1)
+
+        xr = jnp.repeat(xf, K, axis=0)                                # (tK, D)
+        buf = jnp.zeros((E * C, D), xf.dtype).at[slot].add(
+            xr * keep[:, None].astype(xf.dtype))
+        eb = shard(buf.reshape(E, C, D), "experts", None, None)
+
+        h = self._expert_mm(eb, params["w_up"], self.mask_up)
+        if self.gated:
+            g = self._expert_mm(eb, params["w_gate"], self.mask_up)
+            h = jax.nn.silu(g) * h
+        h = shard(h, "experts", None, None)
+        out = self._expert_mm(h, params["w_down"], self.mask_down)    # (E, C, D)
+        out = shard(out, "experts", None, None)
+
+        # gather back + combine
+        outf = out.reshape(E * C, D)
+        yk = outf[slot] * (flat_gate * keep)[:, None].astype(out.dtype)
+        y = yk.reshape(t, K, D).sum(axis=1)
+        y = shard(y, "batch", None)
+
+        if self.shared is not None:
+            ys = self.shared.apply(params["shared"], xf)
+            if self.shared_gated:
+                sg = jax.nn.sigmoid(
+                    self.w_shared_gate.apply(params["shared_gate"], xf))
+                ys = ys * sg
+            y = y + ys
+
+        # Switch-style load-balance aux loss (over ROUTED experts; the
+        # physical padding experts receive no probability mass)
+        me = probs.mean(axis=0)                                       # (n_experts,)
+        ce = oh.reshape(t, K, E).sum(axis=1).mean(axis=0)[: self.n_experts]
+        aux = self.n_experts * jnp.sum(me * ce.astype(me.dtype))
+        return y.reshape(B, T, D), aux

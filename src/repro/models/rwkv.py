@@ -1,0 +1,160 @@
+"""RWKV-6 "Finch" (arXiv:2404.05892): attention-free time-mix with
+data-dependent decay + squared-ReLU channel-mix.
+
+Recurrence (per head, head_dim N):
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t          (state S: (N_k, N_v))
+    y_t = r_t (S_{t-1} + diag(u) k_t^T v_t)
+
+with w_t = exp(-exp(w0 + tanh(x̃_t A) B)) a *data-dependent* per-channel
+decay (the Finch contribution), and token-shift interpolation x̃ between
+x_t and x_{t-1}. All six projections (r/k/v/g + decay LoRA + output) are
+MPD-compressible dense matmuls, so the paper's technique applies unchanged
+to this attention-free family.
+
+The sequence dimension is processed in a ``lax.scan`` — O(T) compute and
+O(1) state, which is what makes the ``long_500k`` decode cell runnable for
+this arch (state carries the whole context; no KV cache).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.policy import CompressionPolicy
+from .linear import Linear
+
+
+@dataclasses.dataclass(frozen=True)
+class RWKVSpec:
+    d_model: int
+    n_heads: int
+    head_dim: int
+    d_ff: int
+    decay_lora: int = 64
+    wr: Linear = None
+    wk: Linear = None
+    wv: Linear = None
+    wg: Linear = None
+    wo: Linear = None
+    # channel mix
+    ck: Linear = None
+    cv: Linear = None
+    cr: Linear = None
+
+    @staticmethod
+    def make(policy: CompressionPolicy, d_model, d_ff, head_dim=64,
+             decay_lora=64, seed_salt=0) -> "RWKVSpec":
+        n_heads = d_model // head_dim
+        mk = lambda i, a, b, kind, axes=(None, None): Linear.make(
+            policy, a, b, kind, seed_salt=seed_salt * 11 + i, axes=axes)
+        return RWKVSpec(
+            d_model, n_heads, head_dim, d_ff, decay_lora,
+            wr=mk(0, d_model, d_model, "ssm_proj", axes=("embed", "heads")),
+            wk=mk(1, d_model, d_model, "ssm_proj", axes=("embed", "heads")),
+            wv=mk(2, d_model, d_model, "ssm_proj", axes=("embed", "heads")),
+            wg=mk(3, d_model, d_model, "ssm_proj", axes=("embed", "heads")),
+            wo=mk(4, d_model, d_model, "ssm_proj", axes=("heads", "embed")),
+            ck=mk(5, d_model, d_ff, "mlp", axes=("embed", "ffn")),
+            cv=mk(6, d_ff, d_model, "mlp", axes=("ffn", "embed")),
+            cr=mk(7, d_model, d_model, "mlp", axes=("embed", "heads")),
+        )
+
+    def init(self, key, dtype=jnp.float32):
+        ks = jax.random.split(key, 12)
+        D, H, N, L = self.d_model, self.n_heads, self.head_dim, self.decay_lora
+        p = {
+            "wr": self.wr.init(ks[0], dtype), "wk": self.wk.init(ks[1], dtype),
+            "wv": self.wv.init(ks[2], dtype), "wg": self.wg.init(ks[3], dtype),
+            "wo": self.wo.init(ks[4], dtype),
+            "ck": self.ck.init(ks[5], dtype), "cv": self.cv.init(ks[6], dtype),
+            "cr": self.cr.init(ks[7], dtype),
+            # token-shift mixing coefficients (five branches: r,k,v,g,w)
+            "mix": jax.random.uniform(ks[8], (5, D), dtype),
+            "mix_c": jax.random.uniform(ks[11], (2, D), dtype),  # channel-mix shifts
+            # data-dependent decay LoRA: w = exp(-exp(w0 + tanh(x A) B))
+            "w0": jnp.asarray(
+                np.log(np.exp(np.linspace(-6.0, -0.3, D)) + 1e-9), dtype),
+            "wA": jax.random.normal(ks[9], (D, L), dtype) * float(1 / np.sqrt(D)),
+            "wB": jax.random.normal(ks[10], (L, D), dtype) * float(1 / np.sqrt(L)),
+            "u": jnp.zeros((H, N), dtype),  # first-token bonus
+            "ln_x": jnp.ones((D,), dtype),  # per-head group-norm gain
+        }
+        return p
+
+    def axes(self):
+        a = {k: getattr(self, k).axes()
+             for k in ("wr", "wk", "wv", "wg", "wo", "ck", "cv", "cr")}
+        a.update({
+            "mix": (None, None), "mix_c": (None, None),
+            "w0": ("heads",), "wA": ("embed", None), "wB": (None, "heads"),
+            "u": ("kv_heads", None), "ln_x": ("heads",),
+        })
+        return a
+
+    # --- time mix -----------------------------------------------------------
+    def _branches(self, params, x, x_prev):
+        """Token-shifted branch inputs. x: (B,T,D); x_prev: (B,1,D) last token
+        of the previous segment (zeros at sequence start)."""
+        xs = jnp.concatenate([x_prev, x[:, :-1]], axis=1)  # shifted right
+        mix = params["mix"]  # (5, D)
+        xr, xk, xv, xg, xw = [x * mix[i] + xs * (1 - mix[i]) for i in range(5)]
+        B, T, D = x.shape
+        H, N = self.n_heads, self.head_dim
+        r = self.wr.apply(params["wr"], xr).reshape(B, T, H, N)
+        k = self.wk.apply(params["wk"], xk).reshape(B, T, H, N)
+        v = self.wv.apply(params["wv"], xv).reshape(B, T, H, N)
+        g = jax.nn.silu(self.wg.apply(params["wg"], xg))
+        w = jnp.exp(-jnp.exp(
+            params["w0"].astype(jnp.float32)
+            + jnp.tanh(xw @ params["wA"]) @ params["wB"]
+        )).reshape(B, T, H, N)
+        return r, k, v, g, w
+
+    def time_mix(self, params, x, state, x_prev):
+        """x: (B,T,D); state: (B,H,N,N); returns (y, new_state, new_x_prev)."""
+        B, T, D = x.shape
+        H, N = self.n_heads, self.head_dim
+        r, k, v, g, w = self._branches(params, x, x_prev)
+        u = params["u"].astype(jnp.float32)
+
+        def step(S, inp):
+            r_t, k_t, v_t, w_t = inp  # (B,H,N) each
+            kv = k_t[..., :, None].astype(jnp.float32) * v_t[..., None, :].astype(jnp.float32)
+            y = jnp.einsum("bhk,bhkv->bhv", r_t.astype(jnp.float32),
+                           S + u[None, :, :, None] * kv)
+            S = w_t[..., :, None].astype(jnp.float32) * S + kv
+            return S, y
+
+        seq = (jnp.moveaxis(r, 1, 0), jnp.moveaxis(k, 1, 0),
+               jnp.moveaxis(v, 1, 0), jnp.moveaxis(w, 1, 0))
+        state, ys = jax.lax.scan(step, state, seq)
+        y = jnp.moveaxis(ys, 0, 1).reshape(B, T, H * N).astype(x.dtype)
+        # per-head group norm, then gate and output projection
+        y = y.reshape(B, T, H, N)
+        mu = y.mean(-1, keepdims=True)
+        var = y.var(-1, keepdims=True)
+        y = ((y - mu) * jax.lax.rsqrt(var + 1e-5)).reshape(B, T, D)
+        y = y * params["ln_x"] * g
+        return self.wo.apply(params["wo"], y), state, x[:, -1:]
+
+    # --- channel mix ---------------------------------------------------------
+    def channel_mix(self, params, x, x_prev):
+        xs = jnp.concatenate([x_prev, x[:, :-1]], axis=1)
+        mix = params["mix_c"]
+        xk = x * mix[0] + xs * (1 - mix[0])
+        xr = x * mix[1] + xs * (1 - mix[1])
+        k = jnp.square(jnp.maximum(self.ck.apply(params["ck"], xk), 0))
+        r = jax.nn.sigmoid(self.cr.apply(params["cr"], xr))
+        return r * self.cv.apply(params["cv"], k), x[:, -1:]
+
+    def init_state(self, batch: int, dtype=jnp.float32):
+        return {
+            "S": jnp.zeros((batch, self.n_heads, self.head_dim, self.head_dim),
+                           jnp.float32),
+            "x_tm": jnp.zeros((batch, 1, self.d_model), dtype),
+            "x_cm": jnp.zeros((batch, 1, self.d_model), dtype),
+        }

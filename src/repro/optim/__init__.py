@@ -1,0 +1,1 @@
+from .optimizer import OptConfig, apply_updates, init_state, schedule_lr, state_axes  # noqa

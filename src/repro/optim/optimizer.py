@@ -1,0 +1,152 @@
+"""Optimizers (pure JAX, optax-free): AdamW + SGD(momentum), LR schedules,
+global-norm clipping, and the MPD mask re-application hook.
+
+Paper fidelity: Algorithm 1 line 14 re-applies the binary mask to the
+weights after every update. For ``masked_dense`` models we implement this as
+an optional post-update projection (``mask_fn``); for ``packed`` models it is
+a structural no-op (off-mask weights don't exist). Because the masked-matmul
+custom VJP already zeroes off-mask gradients, AdamW's weight-decay term is
+the only way off-mask weights could drift — the projection kills that too,
+keeping the training invariant *exactly*.
+
+ZeRO-1: ``state_axes()`` mirrors the param logical-axis tree so the first
+and second moments can be sharded over the data axis (optimizer-state
+sharding); the train step gathers nothing — moments live and update fully
+sharded.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    kind: str = "adamw"          # adamw | sgd
+    lr: float = 1e-3
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    momentum: float = 0.9        # sgd
+    clip_norm: float = 0.0       # 0 => off
+    # schedule
+    schedule: str = "constant"   # constant | cosine | step
+    warmup_steps: int = 0
+    total_steps: int = 10000
+    min_lr_ratio: float = 0.1
+    step_decay_every: int = 0    # paper's AlexNet recipe: /10 every 30 epochs
+    step_decay_rate: float = 0.1
+
+
+def schedule_lr(cfg: OptConfig, step) -> jnp.ndarray:
+    step = jnp.asarray(step, jnp.float32)
+    lr = jnp.asarray(cfg.lr, jnp.float32)
+    if cfg.warmup_steps:
+        warm = jnp.minimum(1.0, (step + 1) / cfg.warmup_steps)
+    else:
+        warm = 1.0
+    if cfg.schedule == "cosine":
+        frac = jnp.clip((step - cfg.warmup_steps)
+                        / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+        decay = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (
+            1 + jnp.cos(jnp.pi * frac))
+    elif cfg.schedule == "step" and cfg.step_decay_every:
+        decay = cfg.step_decay_rate ** jnp.floor(step / cfg.step_decay_every)
+    else:
+        decay = 1.0
+    return lr * warm * decay
+
+
+def init_state(cfg: OptConfig, params) -> Dict[str, Any]:
+    zeros = lambda: jax.tree.map(jnp.zeros_like, params)
+    st: Dict[str, Any] = {"step": jnp.zeros((), jnp.int32)}
+    if cfg.kind == "adamw":
+        st["mu"] = zeros()
+        st["nu"] = zeros()
+    else:
+        st["mom"] = zeros()
+    return st
+
+
+def state_axes(cfg: OptConfig, param_axes) -> Dict[str, Any]:
+    """Logical-axis tree for the optimizer state (mirrors the param tree —
+    ZeRO-1 shards these over 'data' via the rule table)."""
+    st: Dict[str, Any] = {"step": ()}
+    if cfg.kind == "adamw":
+        st["mu"] = param_axes
+        st["nu"] = param_axes
+    else:
+        st["mom"] = param_axes
+    return st
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                      for g in jax.tree.leaves(grads)))
+    scale = jnp.minimum(1.0, max_norm / (gn + 1e-9))
+    return jax.tree.map(lambda g: (g * scale).astype(g.dtype), grads), gn
+
+
+def apply_updates(cfg: OptConfig, params, grads, state,
+                  mask_fn: Optional[Callable] = None):
+    """One optimizer step. Returns (new_params, new_state, metrics).
+
+    ``mask_fn(params) -> params`` is the paper's post-update mask projection
+    (Algorithm 1 line 14); pass ``None`` for packed/dense models.
+    """
+    metrics = {}
+    if cfg.clip_norm:
+        grads, gn = clip_by_global_norm(grads, cfg.clip_norm)
+        metrics["grad_norm"] = gn
+    lr = schedule_lr(cfg, state["step"])
+    metrics["lr"] = lr
+
+    if cfg.kind == "adamw":
+        t = state["step"].astype(jnp.float32) + 1.0
+        bc1 = 1 - cfg.b1 ** t
+        bc2 = 1 - cfg.b2 ** t
+
+        def upd(p, g, mu, nu):
+            g32 = g.astype(jnp.float32)
+            mu = cfg.b1 * mu.astype(jnp.float32) + (1 - cfg.b1) * g32
+            nu = cfg.b2 * nu.astype(jnp.float32) + (1 - cfg.b2) * g32 * g32
+            step = (mu / bc1) / (jnp.sqrt(nu / bc2) + cfg.eps)
+            if cfg.weight_decay:
+                step = step + cfg.weight_decay * p.astype(jnp.float32)
+            return ((p.astype(jnp.float32) - lr * step).astype(p.dtype),
+                    mu.astype(p.dtype), nu.astype(p.dtype))
+
+        flat_p, tdef = jax.tree.flatten(params)
+        flat_g = tdef.flatten_up_to(grads)
+        flat_mu = tdef.flatten_up_to(state["mu"])
+        flat_nu = tdef.flatten_up_to(state["nu"])
+        out = [upd(p, g, m, n) for p, g, m, n in
+               zip(flat_p, flat_g, flat_mu, flat_nu)]
+        new_p = tdef.unflatten([o[0] for o in out])
+        new_state = {"step": state["step"] + 1,
+                     "mu": tdef.unflatten([o[1] for o in out]),
+                     "nu": tdef.unflatten([o[2] for o in out])}
+    elif cfg.kind == "sgd":
+        def upd(p, g, m):
+            m = cfg.momentum * m.astype(jnp.float32) + g.astype(jnp.float32)
+            return ((p.astype(jnp.float32) - lr * m).astype(p.dtype),
+                    m.astype(p.dtype))
+
+        flat_p, tdef = jax.tree.flatten(params)
+        flat_g = tdef.flatten_up_to(grads)
+        flat_m = tdef.flatten_up_to(state["mom"])
+        out = [upd(p, g, m) for p, g, m in zip(flat_p, flat_g, flat_m)]
+        new_p = tdef.unflatten([o[0] for o in out])
+        new_state = {"step": state["step"] + 1,
+                     "mom": tdef.unflatten([o[1] for o in out])}
+    else:
+        raise ValueError(cfg.kind)
+
+    if mask_fn is not None:
+        new_p = mask_fn(new_p)
+    return new_p, new_state, metrics

@@ -1,0 +1,146 @@
+"""Training loop: jitted step (loss + grads + optimizer + mask projection),
+sharding-aware setup, gradient compression, straggler monitoring, periodic +
+emergency checkpointing, auto-resume.
+
+The same ``make_train_step`` serves single-device CPU examples and the
+512-chip dry-run — sharding enters only through (mesh, rules) and the
+in/out shardings derived from the model's logical-axis trees.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import checkpoint as ckpt_lib
+from repro.dist import compress as compress_lib
+from repro.dist import sharding as sh
+from repro.dist.straggler import StragglerMonitor
+from repro.models.model import Model
+from repro.optim import optimizer as opt_lib
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    opt: opt_lib.OptConfig = opt_lib.OptConfig()
+    grad_compress_bits: int = 0       # 0 = off; 8 = int8 EF compression
+    microbatch: int = 0               # 0 = no gradient accumulation
+    ckpt_dir: str = ""
+    ckpt_every: int = 0
+    log_every: int = 10
+
+
+def make_train_step(model: Model, tcfg: TrainConfig,
+                    mask_projection: bool = None) -> Callable:
+    """Build the jitted train step: (params, opt_state, ef_state, batch) ->
+    (params, opt_state, ef_state, metrics)."""
+    if mask_projection is None:
+        mask_projection = model.cfg.mpd_mode == "masked_dense" and model.cfg.mpd_c > 1
+    mask_fn = model.mask_projection if mask_projection else None
+    bits = tcfg.grad_compress_bits
+
+    def loss_fn(params, batch):
+        return model.train_loss(params, batch)
+
+    def step(params, opt_state, ef_state, batch):
+        if tcfg.microbatch and batch["labels"].shape[0] > tcfg.microbatch:
+            # gradient accumulation over microbatches (sequential, constant mem)
+            B = batch["labels"].shape[0]
+            mb = tcfg.microbatch
+            n = B // mb
+            def acc_body(carry, i):
+                loss_acc, g_acc = carry
+                sub = jax.tree.map(
+                    lambda x: jax.lax.dynamic_slice_in_dim(x, i * mb, mb, 0),
+                    batch)
+                l, g = jax.value_and_grad(loss_fn)(params, sub)
+                return (loss_acc + l / n,
+                        jax.tree.map(lambda a, b: a + b / n, g_acc, g)), None
+            zeros = jax.tree.map(jnp.zeros_like, params)
+            (loss, grads), _ = jax.lax.scan(
+                acc_body, (jnp.zeros(()), zeros), jnp.arange(n))
+        else:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        if bits > 0:
+            grads, ef_state = compress_lib.compress_with_ef(grads, ef_state, bits)
+        params, opt_state, metrics = opt_lib.apply_updates(
+            tcfg.opt, params, grads, opt_state, mask_fn=mask_fn)
+        metrics["loss"] = loss
+        return params, opt_state, ef_state, metrics
+
+    return step
+
+
+def setup(model: Model, tcfg: TrainConfig, key,
+          mesh=None, rules=None) -> Tuple[Any, Any, Any, Callable]:
+    """Init (or resume) params/opt/ef state, placed per the sharding rules."""
+    params = model.init(key)
+    opt_state = opt_lib.init_state(tcfg.opt, params)
+    ef_state = (compress_lib.init_ef_state(params)
+                if tcfg.grad_compress_bits > 0 else {})
+
+    step_fn = make_train_step(model, tcfg)
+    if mesh is not None:
+        params_sh = sh.tree_shardings(mesh, rules, model.axes())
+        params = jax.device_put(params, params_sh)
+        # ZeRO-1: moments sharded like params (further sharding over 'data'
+        # is expressed by a rule table that maps extra axes).
+        opt_axes = opt_lib.state_axes(tcfg.opt, model.axes())
+        opt_state = jax.device_put(
+            opt_state, sh.tree_shardings(mesh, rules, opt_axes))
+        step_fn = jax.jit(step_fn, donate_argnums=(0, 1, 2))
+    else:
+        step_fn = jax.jit(step_fn, donate_argnums=(0, 1, 2))
+
+    # auto-resume
+    start_step = 0
+    if tcfg.ckpt_dir:
+        last = ckpt_lib.latest_step(tcfg.ckpt_dir)
+        if last is not None:
+            state = {"params": params, "opt": opt_state}
+            state = ckpt_lib.restore(tcfg.ckpt_dir, last, state)
+            params, opt_state = state["params"], state["opt"]
+            start_step = last
+    return params, opt_state, ef_state, step_fn, start_step
+
+
+def run(model: Model, tcfg: TrainConfig, data_iter, num_steps: int,
+        key=None, mesh=None, rules=None, eval_fn=None,
+        log_fn=print) -> Dict[str, Any]:
+    """Drive training for ``num_steps``; returns final state + history."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    params, opt_state, ef_state, step_fn, start = setup(
+        model, tcfg, key, mesh, rules)
+    if start:
+        data_iter.restore(ckpt_lib.load_extra(tcfg.ckpt_dir, start).get(
+            "data", data_iter.state()))
+    monitor = StragglerMonitor()
+    history = []
+    for i in range(start, num_steps):
+        batch = data_iter.next()
+        batch = {k: jnp.asarray(v) for k, v in batch.items()}
+        monitor.start()
+        params, opt_state, ef_state, metrics = step_fn(
+            params, opt_state, ef_state, batch)
+        jax.block_until_ready(metrics["loss"])
+        verdict = monitor.stop()
+        loss = float(metrics["loss"])
+        history.append(loss)
+        if tcfg.log_every and (i % tcfg.log_every == 0 or i == num_steps - 1):
+            log_fn(f"step {i:6d} loss {loss:.4f} "
+                   f"lr {float(metrics['lr']):.2e} "
+                   f"t {monitor.mean_step_time*1e3:.1f}ms")
+        do_ckpt = tcfg.ckpt_dir and tcfg.ckpt_every and (
+            (i + 1) % tcfg.ckpt_every == 0)
+        if verdict == "checkpoint" and tcfg.ckpt_dir:
+            do_ckpt = True  # emergency snapshot on persistent straggle
+        if do_ckpt:
+            ckpt_lib.save(tcfg.ckpt_dir, i + 1,
+                          {"params": params, "opt": opt_state},
+                          extra={"data": data_iter.state()}, blocking=False)
+    ckpt_lib.wait_pending()
+    return {"params": params, "opt_state": opt_state, "history": history}

@@ -1,0 +1,119 @@
+"""Property tests for MPD mask generation & permutation algebra (paper §2)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import mask as mask_lib
+from repro.core import permute
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+@st.composite
+def mask_geometries(draw):
+    nb = draw(st.sampled_from([2, 3, 4, 8]))
+    bi = draw(st.integers(1, 12))
+    bo = draw(st.integers(1, 12))
+    return nb * bi, nb * bo, nb
+
+
+@given(mask_geometries(), st.integers(0, 2**31 - 1))
+@settings(**SETTINGS)
+def test_mask_density_exact(geom, seed):
+    """Mask density is exactly 1/nb — the compression factor is exact."""
+    d_in, d_out, nb = geom
+    spec = mask_lib.make_mask_spec(d_in, d_out, nb, seed=seed)
+    m = mask_lib.mask_dense(spec)
+    assert m.sum() == d_in * d_out / nb
+    assert spec.nonzeros() == int(m.sum())
+
+
+@given(mask_geometries(), st.integers(0, 2**31 - 1))
+@settings(**SETTINGS)
+def test_mask_is_permutation_of_block_diag(geom, seed):
+    """M = B[p_in, :][:, p_out] — row/col permutation of the base (Fig 1f)."""
+    d_in, d_out, nb = geom
+    spec = mask_lib.make_mask_spec(d_in, d_out, nb, seed=seed)
+    m = mask_lib.mask_dense(spec)
+    b = mask_lib.block_diag_base(d_in, d_out, nb)
+    un = m[np.ix_(permute.invert(spec.in_perm), permute.invert(spec.out_perm))]
+    np.testing.assert_array_equal(un, b)
+
+
+@given(mask_geometries(), st.integers(0, 2**31 - 1))
+@settings(**SETTINGS)
+def test_subgraph_separation(geom, seed):
+    """M[i,j] != 0 iff i and j land in the same diagonal block (paper Fig 1b/d:
+    independent sub-graphs <=> block structure)."""
+    d_in, d_out, nb = geom
+    spec = mask_lib.make_mask_spec(d_in, d_out, nb, seed=seed)
+    m = mask_lib.mask_dense(spec)
+    in_blk, out_blk = mask_lib.block_id_of(spec)
+    expected = (in_blk[:, None] == out_blk[None, :]).astype(np.float32)
+    np.testing.assert_array_equal(m, expected)
+
+
+@given(st.integers(1, 200), st.integers(0, 2**31 - 1))
+@settings(**SETTINGS)
+def test_permutation_algebra(n, seed):
+    rng = np.random.default_rng(seed)
+    p = permute.random_permutation(rng, n)
+    q = permute.random_permutation(rng, n)
+    x = rng.normal(size=n).astype(np.float32)
+    # inverse law
+    np.testing.assert_array_equal(
+        permute.apply_np(permute.invert(p), permute.apply_np(p, x)), x
+    )
+    # composition law
+    np.testing.assert_array_equal(
+        permute.apply_np(permute.compose(p, q), x),
+        permute.apply_np(p, permute.apply_np(q, x)),
+    )
+    # matrix cross-check against the paper's P-matrix notation
+    pm = permute.permutation_matrix(p)
+    np.testing.assert_allclose(pm @ x, permute.apply_np(p, x), rtol=0, atol=0)
+    np.testing.assert_allclose(pm.T @ pm, np.eye(n), rtol=0, atol=0)
+
+
+def test_matrix_notation_matches_paper():
+    """M = P_row B P_col as dense matrix algebra (paper Eq. for M_c)."""
+    spec = mask_lib.make_mask_spec(12, 8, nb=4, seed=11)
+    b = mask_lib.block_diag_base(12, 8, 4)
+    p_in = permute.permutation_matrix(spec.in_perm)
+    p_out = permute.permutation_matrix(spec.out_perm)
+    # gather-on-rows == left-multiply by P_in; gather-on-cols == right-mult P_out^T
+    m_alg = p_in @ b @ p_out.T
+    np.testing.assert_array_equal(m_alg, mask_lib.mask_dense(spec))
+
+
+def test_unpermuted_mask_is_block_diag():
+    spec = mask_lib.make_mask_spec(20, 10, nb=2, permuted=False)
+    assert not spec.is_permuted
+    np.testing.assert_array_equal(
+        mask_lib.mask_dense(spec), mask_lib.block_diag_base(20, 10, 2)
+    )
+
+
+def test_chain_specs_fuse():
+    specs = mask_lib.chain_specs((32, 48, 16, 64), nb=4, seed=5)
+    from repro.core import fold
+    for a, b in zip(specs, specs[1:]):
+        assert permute.is_identity(fold.inter_layer_perm(a, b))
+    # unfused chains generally do NOT cancel
+    specs_nf = mask_lib.chain_specs((32, 48, 16), nb=4, seed=5, fuse=False)
+    assert not permute.is_identity(fold.inter_layer_perm(specs_nf[0], specs_nf[1]))
+
+
+def test_indivisible_rejected():
+    with pytest.raises(ValueError):
+        mask_lib.make_mask_spec(10, 9, nb=4)
+
+
+def test_mask_determinism():
+    a = mask_lib.make_mask_spec(16, 16, 4, seed=42)
+    b = mask_lib.make_mask_spec(16, 16, 4, seed=42)
+    np.testing.assert_array_equal(a.in_perm, b.in_perm)
+    np.testing.assert_array_equal(a.out_perm, b.out_perm)
+    c = mask_lib.make_mask_spec(16, 16, 4, seed=43)
+    assert not np.array_equal(a.in_perm, c.in_perm)

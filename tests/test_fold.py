@@ -1,0 +1,126 @@
+"""Fold/unfold + mode-equivalence tests (paper Eq. 1-2 and the packed
+beyond-paper parameterization)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import fold, mask, mpd, permute
+
+SETTINGS = dict(max_examples=15, deadline=None)
+
+
+@st.composite
+def layer_geoms(draw):
+    nb = draw(st.sampled_from([2, 4, 8]))
+    bi = draw(st.integers(2, 10))
+    bo = draw(st.integers(2, 10))
+    seed = draw(st.integers(0, 2**31 - 1))
+    return nb * bi, nb * bo, nb, seed
+
+
+@given(layer_geoms())
+@settings(**SETTINGS)
+def test_fold_unfold_roundtrip(geom):
+    d_in, d_out, nb, seed = geom
+    spec = mask.make_mask_spec(d_in, d_out, nb, seed=seed)
+    w = np.random.default_rng(seed).normal(size=(d_in, d_out)).astype(np.float32)
+    wm = w * mask.mask_dense(spec)
+    packed = fold.fold(spec, wm)
+    assert packed.shape == (nb, d_in // nb, d_out // nb)
+    np.testing.assert_allclose(np.asarray(fold.unfold(spec, packed)), wm, atol=0)
+    assert fold.fold_residual(spec, wm) == 0.0
+
+
+@given(layer_geoms())
+@settings(**SETTINGS)
+def test_masked_dense_vs_packed_forward(geom):
+    """Paper Eq. (2) inference equivalence: the folded block-diagonal layer
+    computes exactly the masked-dense layer's function."""
+    d_in, d_out, nb, seed = geom
+    spec = mask.make_mask_spec(d_in, d_out, nb, seed=seed)
+    ls_md = mpd.MPDLinearSpec(d_in, d_out, spec, mode="masked_dense")
+    ls_pk = mpd.MPDLinearSpec(d_in, d_out, spec, mode="packed")
+    pm = mpd.init(jax.random.PRNGKey(seed % 997), ls_md)
+    pp = mpd.to_packed(ls_md, pm)
+    x = jax.random.normal(jax.random.PRNGKey(1), (6, d_in))
+    ym = mpd.apply(ls_md, pm, x)
+    yp = mpd.apply(ls_pk, pp, x)
+    np.testing.assert_allclose(np.asarray(ym), np.asarray(yp), atol=2e-5)
+
+
+@given(layer_geoms())
+@settings(**SETTINGS)
+def test_gradient_equivalence(geom):
+    """Beyond-paper claim: training in packed parameterization follows the
+    SAME loss surface — grad(packed) == fold(grad(masked_dense))."""
+    d_in, d_out, nb, seed = geom
+    spec = mask.make_mask_spec(d_in, d_out, nb, seed=seed)
+    ls_md = mpd.MPDLinearSpec(d_in, d_out, spec, mode="masked_dense", use_bias=False)
+    ls_pk = mpd.MPDLinearSpec(d_in, d_out, spec, mode="packed", use_bias=False)
+    pm = mpd.init(jax.random.PRNGKey(seed % 997), ls_md)
+    pp = mpd.to_packed(ls_md, pm)
+    x = jax.random.normal(jax.random.PRNGKey(2), (5, d_in))
+    t = jax.random.normal(jax.random.PRNGKey(3), (5, d_out))
+
+    gm = jax.grad(lambda w: jnp.mean((mpd.apply(ls_md, {"w": w}, x) - t) ** 2))(pm["w"])
+    gp = jax.grad(lambda w: jnp.mean((mpd.apply(ls_pk, {"w": w}, x) - t) ** 2))(pp["w"])
+    np.testing.assert_allclose(
+        np.asarray(fold.fold(spec, gm)), np.asarray(gp), atol=1e-5
+    )
+    # and masked-dense grads are zero off-mask (Algorithm 1 invariant)
+    m = mask.mask_dense(spec)
+    assert np.all(np.asarray(gm) * (1 - m) == 0)
+
+
+def test_reapply_mask_is_projection():
+    spec = mask.make_mask_spec(24, 16, 4, seed=0)
+    ls = mpd.MPDLinearSpec(24, 16, spec, mode="masked_dense")
+    p = mpd.init(jax.random.PRNGKey(0), ls)
+    # corrupt off-mask entries (as a mask-free optimizer step would)
+    p2 = dict(p, w=p["w"] + 1.0)
+    p3 = mpd.reapply_mask(ls, p2)
+    m = mask.mask_dense(spec)
+    assert np.all(np.asarray(p3["w"]) * (1 - m) == 0)
+    # on-mask entries untouched
+    np.testing.assert_allclose(np.asarray(p3["w"]) * m, np.asarray(p2["w"]) * m)
+
+
+def test_param_count_compression():
+    """Paper Table 1: parameter count drops by exactly c on masked layers."""
+    spec = mask.make_mask_spec(300, 100, nb=10, seed=0)
+    ls = mpd.MPDLinearSpec(300, 100, spec, mode="packed", use_bias=False)
+    dense = 300 * 100
+    assert ls.param_count() == dense // 10
+
+
+def test_fused_chain_forward_no_gathers():
+    """A fused chain evaluated fully packed (skipping inner permutations)
+    equals the masked-dense chain (paper Fig 3 identity-cancellation)."""
+    dims = (32, 48, 16)
+    specs = mask.chain_specs(dims, nb=4, seed=9)
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (4, dims[0]))
+
+    # masked-dense reference chain
+    ws = []
+    for i, spec in enumerate(specs):
+        ls = mpd.MPDLinearSpec(spec.d_in, spec.d_out, spec, mode="masked_dense",
+                               use_bias=False)
+        ws.append(mpd.init(jax.random.PRNGKey(i), ls))
+    y_ref = x
+    for spec, w in zip(specs, ws):
+        ls = mpd.MPDLinearSpec(spec.d_in, spec.d_out, spec, mode="masked_dense",
+                               use_bias=False)
+        y_ref = mpd.apply(ls, w, y_ref)
+
+    # packed chain with inner perms skipped: pack once, bdmm chain, unpack once
+    from repro.kernels import ops
+    y = fold.pack_inputs(specs[0], x)
+    for spec, w in zip(specs, ws):
+        ls_md = mpd.MPDLinearSpec(spec.d_in, spec.d_out, spec, mode="masked_dense",
+                                  use_bias=False)
+        y = ops.bdmm(y, fold.fold(spec, w["w"]))
+    y = fold.unpack_outputs(specs[-1], y)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), atol=2e-5)
