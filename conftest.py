@@ -1,0 +1,129 @@
+"""Repo-root pytest bootstrap.
+
+Two jobs, both about running the suite on a bare container with zero
+install steps:
+
+1. **src layout on sys.path** — belt-and-braces alongside the
+   ``tool.pytest.ini_options.pythonpath`` setting, so the suite also works
+   when pytest is invoked with a config override.
+2. **hypothesis fallback** — the property tests use a small slice of
+   hypothesis (``given`` / ``settings`` / ``integers`` / ``sampled_from`` /
+   ``composite``). When the real library is missing (it is an optional
+   ``test`` extra), a deterministic miniature implementation is installed in
+   ``sys.modules`` *before* test modules import: each ``@given`` test runs
+   ``max_examples`` times with seeds derived from the example index. No
+   shrinking, no database — but the invariants still get exercised, and the
+   real hypothesis takes over automatically wherever it is installed.
+"""
+
+import os
+import subprocess
+import sys
+
+_SRC = os.path.join(os.path.dirname(os.path.abspath(__file__)), "src")
+if _SRC not in sys.path:
+    sys.path.insert(0, _SRC)
+
+
+def run_forced_device_subprocess(code: str, n_devices: int = 8,
+                                 timeout: int = 600) -> str:
+    """Run ``code`` in a fresh interpreter with forced host devices.
+
+    The shared runner for multi-device tests: the main pytest process keeps
+    one device (XLA locks the count at first backend init), so anything
+    mesh-shaped executes here. Failures surface the child's exit code,
+    stdout, and stderr — a collection-time ImportError in the child must be
+    readable from the assertion, not swallowed as a bare nonzero exit.
+    """
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
+    env["PYTHONPATH"] = _SRC
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, env=env, timeout=timeout)
+    assert r.returncode == 0, (
+        f"subprocess exited {r.returncode}\n"
+        f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}")
+    return r.stdout
+
+
+def _install_hypothesis_fallback():
+    try:
+        import hypothesis  # noqa: F401  — real library present, use it
+        return
+    except ImportError:
+        pass
+
+    import types
+
+    import numpy as np
+
+    class _Strategy:
+        def __init__(self, sample):
+            self.sample = sample  # sample(rng) -> value
+
+    def integers(min_value, max_value):
+        return _Strategy(
+            lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+    def sampled_from(elements):
+        seq = list(elements)
+        return _Strategy(lambda rng: seq[int(rng.integers(len(seq)))])
+
+    def booleans():
+        return _Strategy(lambda rng: bool(rng.integers(2)))
+
+    def floats(min_value=0.0, max_value=1.0):
+        return _Strategy(
+            lambda rng: float(rng.uniform(min_value, max_value)))
+
+    def composite(fn):
+        def build(*args, **kwargs):
+            def sample(rng):
+                return fn(lambda strat: strat.sample(rng), *args, **kwargs)
+            return _Strategy(sample)
+        return build
+
+    def settings(**kwargs):
+        def deco(fn):
+            fn._mini_hypothesis_settings = dict(kwargs)
+            return fn
+        return deco
+
+    def given(*strategies):
+        def deco(fn):
+            def wrapper():
+                # settings may sit above OR below @given (both orders are
+                # valid with real hypothesis): read the attribute at call
+                # time from whichever function carries it
+                conf = getattr(wrapper, "_mini_hypothesis_settings", None)
+                if conf is None:
+                    conf = getattr(fn, "_mini_hypothesis_settings", {})
+                max_examples = int(conf.get("max_examples", 20))
+                for i in range(max_examples):
+                    rng = np.random.default_rng(0xC0FFEE + 7919 * i)
+                    fn(*[s.sample(rng) for s in strategies])
+
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            wrapper.__module__ = fn.__module__
+            return wrapper
+        return deco
+
+    st_mod = types.ModuleType("hypothesis.strategies")
+    st_mod.integers = integers
+    st_mod.sampled_from = sampled_from
+    st_mod.booleans = booleans
+    st_mod.floats = floats
+    st_mod.composite = composite
+
+    h_mod = types.ModuleType("hypothesis")
+    h_mod.given = given
+    h_mod.settings = settings
+    h_mod.strategies = st_mod
+    h_mod.__mini_fallback__ = True
+
+    sys.modules["hypothesis"] = h_mod
+    sys.modules["hypothesis.strategies"] = st_mod
+
+
+_install_hypothesis_fallback()

@@ -126,10 +126,40 @@ def restore(ckpt_dir: str, step: int, like: Dict[str, Any]) -> Dict[str, Any]:
     return jax.tree.unflatten(treedef, leaves)
 
 
-def restore_with_shardings(ckpt_dir: str, step: int, like, shardings):
-    """Elastic restore: place every leaf with the given shardings (any mesh —
-    this is how a 256-chip checkpoint boots on 512 chips or on 8)."""
+def restore_with_shardings(ckpt_dir: str, step: int, like, shardings=None, *,
+                           axes=None, mesh=None, rules=None):
+    """Elastic restore: place every leaf sharded (any mesh — this is how a
+    256-chip checkpoint boots on 512 chips or on 8).
+
+    Placement comes from one of two sources:
+
+    * ``shardings`` — an explicit pytree of ``Sharding``s (legacy callers), or
+    * ``axes`` — a logical-axis tree (``Model.axes()`` /
+      ``opt_lib.state_axes``) resolved through the :mod:`repro.dist.sharding`
+      rule table. ``mesh``/``rules`` default to the active
+      ``sharding.current()`` context; with no mesh anywhere the restore
+      falls back to host arrays (single-device boot).
+    """
+    if shardings is None and axes is None:
+        raise TypeError(
+            "restore_with_shardings needs either an explicit `shardings` "
+            "pytree or a logical `axes` tree to resolve via the rule table")
     host = restore(ckpt_dir, step, like)
+    if shardings is None:
+        from repro.dist import sharding as sh
+
+        if mesh is None:
+            # inherit the active context as a pair — a caller-supplied mesh
+            # must never pick up rules written for a *different* active mesh
+            # (their tables may name axes this mesh doesn't have)
+            mesh, cur_rules = sh.current()
+            if rules is None:
+                rules = cur_rules
+        if mesh is None:
+            return host
+        if rules is None:
+            rules = sh.default_rules(mesh)
+        shardings = sh.tree_shardings(mesh, rules, axes, like=host)
     flat_h, treedef = jax.tree.flatten(host)
     flat_s = treedef.flatten_up_to(shardings)
     return treedef.unflatten(

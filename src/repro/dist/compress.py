@@ -1,0 +1,70 @@
+"""Gradient compression for the data-parallel all-reduce: symmetric int-k
+quantization with error feedback (EF).
+
+EF keeps the *running sum* of compressed gradients tracking the true sum —
+the residual each step is folded back into the next gradient, so SGD with
+compressed gradients converges to the same point (the EF-SGD guarantee).
+``compress_with_ef`` returns the dequantized gradients (what the optimizer
+consumes) so it composes with any optimizer; the wire saving is modeled by
+:func:`wire_bytes` and realized when the int payload crosses the network.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_leaf(g: jax.Array, bits: int) -> Tuple[jax.Array, jax.Array]:
+    """Symmetric uniform quantization to ``bits`` (rounded-to-nearest).
+
+    Returns ``(q, scale)`` with ``q`` int8 (any bits <= 8) and the max
+    dequantization error bounded by ``scale / 2``.
+    """
+    assert 1 <= bits <= 8, bits
+    # 127 for int8, 7 for int4; bits=1 is sign-only {-1, 0, 1} (levels=1,
+    # not the formula's 0 — that would divide by zero)
+    levels = max((1 << (bits - 1)) - 1, 1)
+    amax = jnp.max(jnp.abs(g))
+    scale = jnp.where(amax > 0, amax / levels, jnp.ones((), g.dtype))
+    q = jnp.clip(jnp.round(g / scale), -levels, levels).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def dequantize_leaf(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def init_ef_state(params) -> Any:
+    """Zero residual per leaf, f32 (residuals accumulate across steps)."""
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compress_with_ef(grads, ef_state, bits: int):
+    """Quantize ``grads + ef`` leafwise; the new residual is what was lost.
+
+    Returns ``(dequantized grads, new ef_state)`` — same tree structures in,
+    same out, so the call is a drop-in stage between autodiff and optimizer.
+    """
+    def one(g, e):
+        corrected = g.astype(jnp.float32) + e
+        q, scale = quantize_leaf(corrected, bits)
+        dq = dequantize_leaf(q, scale)
+        return dq.astype(g.dtype), corrected - dq
+
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_e = tdef.flatten_up_to(ef_state)
+    outs = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    return (tdef.unflatten([o[0] for o in outs]),
+            tdef.unflatten([o[1] for o in outs]))
+
+
+def wire_bytes(tree, bits: int) -> int:
+    """Bytes a gradient all-reduce moves per replica: int-k payload when
+    compressing (scales are negligible and excluded), f32 otherwise."""
+    n = sum(int(jnp.size(leaf)) for leaf in jax.tree.leaves(tree))
+    if bits <= 0:
+        return 4 * n
+    return (n * bits + 7) // 8

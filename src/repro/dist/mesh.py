@@ -1,0 +1,30 @@
+"""Mesh construction — production pod shapes and the host test mesh.
+
+FUNCTIONS, not module constants — importing this module never touches jax
+device state (device count is locked at first backend init, and the dry-run
+needs to set XLA_FLAGS before that happens).
+
+``repro.launch.mesh`` re-exports these for backward compatibility; new code
+should import from ``repro.dist``.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 single pod (256 chips) or 2x16x16 (512 chips, 2 pods)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def data_axes(mesh) -> tuple:
+    """The batch-sharding axes for a mesh: ('data',) or ('pod','data')."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def make_host_mesh(n_data: int = 2, n_model: int = 4):
+    """Small mesh for CPU multi-device tests (8 forced host devices)."""
+    return jax.make_mesh((n_data, n_model), ("data", "model"))

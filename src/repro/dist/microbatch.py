@@ -1,0 +1,92 @@
+"""Gradient-accumulation microbatching, divisibility-aware.
+
+Data-parallelism concern, so it lives in the distribution substrate: the
+split must keep every microbatch divisible by the mesh's batch axes, or the
+``shard()`` constraint silently drops the batch assignment and the step's
+compute replicates across data parallelism (the failure class the repo
+measured at 16x for replicated weights).
+
+On the memory lever: among sharding-preserving splits, valid microbatch
+sizes are the multiples of ``ways`` (the batch-axis device count) dividing
+the global batch, so the per-device microbatch is always ≥ 1 row.
+:func:`cap_microbatches` walks the count down to the largest valid value,
+which is exactly the *smallest* valid microbatch ≥ the requested one — the
+minimal possible overshoot. A request below ``ways`` rows can't be honored
+without replication; the cap lands on ``ways`` (1 row per device), which is
+the global memory floor, and warns.
+"""
+
+from __future__ import annotations
+
+import warnings
+
+import jax
+import jax.numpy as jnp
+
+from . import sharding as sh
+
+
+def batch_ways(mesh, rules) -> int:
+    """Total device count over the rule table's batch axes (1 with no mesh)."""
+    ways = 1
+    if mesh is not None and rules:
+        for a in rules.get("batch", ()) or ():
+            ways *= mesh.shape[a]
+    return ways
+
+
+def cap_microbatches(B: int, n: int, ways: int) -> int:
+    """Largest ``n' <= n`` with ``B % n' == 0`` and ``(B//n') % ways == 0``.
+
+    The single home for the microbatch divisibility cap (see module
+    docstring). Returns 1 (no accumulation) when no valid split exists.
+    """
+    while n > 1 and (B % n or (B // n) % ways):
+        n -= 1
+    return max(n, 1)
+
+
+def microbatched_value_and_grad(loss_fn, params, batch, n: int):
+    """Mean loss and grads over ``n`` sequential microbatches.
+
+    Microbatching is reshape + scan-over-xs: scan's static leading-axis
+    slicing preserves GSPMD batch sharding, where a traced ``dynamic_slice``
+    on the sharded batch axis would force an all-gather of the whole global
+    batch per microbatch. Shared by the train loop and the dry-run cell
+    programs — keep the accumulation semantics in one place.
+
+    ``n`` is capped per :func:`cap_microbatches`; falls back to the plain
+    full-batch gradient when no valid split exists.
+    """
+    B = jax.tree.leaves(batch)[0].shape[0]
+    mesh, rules = sh.current()
+    ways = batch_ways(mesh, rules)
+    capped = cap_microbatches(B, n, ways)
+    if capped != n:  # trace-time, so a plain warning reaches the operator
+        if (B // capped) % ways == 0:
+            detail = (f"per-device microbatch is now "
+                      f"{B // capped // ways} row(s)")
+        else:  # no valid split at all: shard() will drop the batch axes
+            detail = ("no sharding-preserving split exists — the batch "
+                      "assignment is dropped and compute replicates")
+        warnings.warn(
+            f"microbatch count capped {n} -> {capped}: batch {B} must split "
+            f"evenly over the {ways}-way batch axes ({detail})", stacklevel=2)
+    n = capped
+    if n <= 1:
+        return jax.value_and_grad(loss_fn)(params, batch)
+    mbs = jax.tree.map(
+        lambda x: sh.shard(x.reshape((n, -1) + x.shape[1:]),
+                           None, "batch", *([None] * (x.ndim - 1))),
+        batch)
+
+    def acc_body(carry, sub):
+        loss_acc, g_acc = carry
+        l, g = jax.value_and_grad(loss_fn)(params, sub)
+        return (loss_acc + l / n,
+                jax.tree.map(lambda a, b: a + b / n, g_acc, g)), None
+
+    zeros = jax.tree.map(jnp.zeros_like, params)
+    (loss, grads), _ = jax.lax.scan(
+        acc_body, (jnp.zeros(()), zeros), mbs)
+    return loss, grads

@@ -1,0 +1,312 @@
+"""Logical-axis sharding: one rule table, three schemes, every layer.
+
+The model/launch/train layers never name mesh axes directly. They annotate
+values with *logical* axes — ``"batch"``, ``"heads"``, ``"kv_heads"``,
+``"vocab"``, ``"ffn"``, ``"experts"``, the MPD block axis ``"blocks"``, the
+KV-cache sequence axis ``"kv_seq"`` — and a *rule table* maps each logical
+name to zero or more mesh axes. Swapping the parallelism scheme (tensor
+parallel, MPD block parallel, long-context sequence parallel) is swapping the
+table; the model code is untouched. This is exactly the layer the paper's
+block-diagonal decomposition needs to pay off on real hardware: the packed
+``(nb, bi, bo)`` weights expose ``nb`` as a first-class shardable axis.
+
+Three entry points:
+
+* :func:`shard` — in-graph activation constraint. Identity when no mesh is
+  active (CPU tests run unchanged); under :func:`use_mesh_rules` it resolves
+  the logical names against the active table and emits a
+  ``with_sharding_constraint``. Assignments that do not divide the concrete
+  dim are **silently dropped** (replicated) — e.g. 8 KV heads on a 16-way
+  model axis: GQA KV is replicated across TP, standard practice.
+* :func:`tree_shardings` — ``NamedSharding`` pytree for params / optimizer
+  state / caches from a logical-axis tree (see ``Model.axes()``). With a
+  ``like`` tree of shapes it additionally *relocates* indivisible
+  assignments to the rightmost dividing dim (head-dim split for GQA, intra-
+  block TP for the MPD block axis) before dropping them.
+* :func:`use_mesh_rules` / :func:`use_mesh` — context managers that install
+  the active (mesh, rules) pair consulted by :func:`shard` and
+  :func:`current` (the vocab-parallel embedding reads the table directly).
+"""
+
+from __future__ import annotations
+
+import contextlib
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from .mesh import data_axes
+
+# Logical axis names resolved by the rule tables. Anything not listed in the
+# active table is replicated — unknown names are not an error, so model code
+# can annotate speculatively.
+LOGICAL_AXES = (
+    "batch", "heads", "kv_heads", "vocab", "embed", "ffn", "inner",
+    "blocks", "experts", "kv_seq", "layers",
+)
+
+Rules = Dict[str, Tuple[str, ...]]
+
+
+# --------------------------------------------------------------- rule tables
+
+def tp_rules(daxes: Sequence[str] = ("data",)) -> Rules:
+    """Megatron-style tensor parallelism over the ``model`` axis.
+
+    Output-parallel projections shard their head/ffn/vocab dim; the packed
+    MPD block axis and the MoE expert axis ride the same mesh axis (blocks
+    are independent — the paper's parallel-speedup property). ``embed`` (the
+    contracted input dim) and the scan ``layers`` axis stay replicated.
+    """
+    daxes = tuple(daxes)
+    return {
+        "batch": daxes,
+        "heads": ("model",),
+        "kv_heads": ("model",),
+        "vocab": ("model",),
+        "ffn": ("model",),
+        "inner": ("model",),
+        "blocks": ("model",),
+        "experts": ("model",),
+        "embed": (),
+        "kv_seq": (),
+        "layers": (),
+    }
+
+
+def block_parallel_rules(daxes: Sequence[str] = ("data",)) -> Rules:
+    """Beyond-paper MPD block parallelism: only the block-diagonal structure
+    is partitioned. Head/ffn dims stay replicated so activations never
+    reshard at block boundaries (the Fig 3 fusion path composes with this:
+    packed-order activations flow shard-local between block matmuls)."""
+    rules = tp_rules(daxes)
+    rules.update({
+        "heads": (),
+        "kv_heads": (),
+        "ffn": (),
+        "inner": (),
+    })
+    return rules
+
+
+def long_context_rules(daxes: Sequence[str] = ("data",)) -> Rules:
+    """Sequence parallelism for the 500k-token cells: the KV sequence axis is
+    sharded over ``model`` and the softmax lse-combine collectives are derived
+    by GSPMD from the plain jnp reductions (flash-decoding dataflow). Head
+    axes must then stay replicated — a mesh axis may appear once per spec."""
+    rules = tp_rules(daxes)
+    rules.update({
+        "kv_seq": ("model",),
+        "heads": (),
+        "kv_heads": (),
+    })
+    return rules
+
+
+RULE_SETS = {
+    "tp": tp_rules,
+    "block": block_parallel_rules,
+    "long_context": long_context_rules,
+}
+
+
+def rules_for_scheme(scheme: str, daxes: Sequence[str] = ("data",)) -> Rules:
+    return RULE_SETS[scheme](daxes)
+
+
+def default_rules(mesh, scheme: str = "tp") -> Rules:
+    """The rule table a mesh gets when the caller supplies none: the scheme's
+    rules over the mesh's own data axes. The single home for this defaulting
+    policy — use_mesh, the train loop, and elastic restore all route here."""
+    return rules_for_scheme(scheme, data_axes(mesh) or ())
+
+
+# ----------------------------------------------------------- active context
+
+# A stack, not a single slot: cells nest (dry-run calibration compiles inner
+# programs under an outer cell's context). Plain module state is correct here
+# because tracing happens on the thread that entered the context.
+_ACTIVE: list = []
+
+
+def current() -> Tuple[Optional[Mesh], Optional[Rules]]:
+    """The active (mesh, rules) pair, or (None, None) outside any context."""
+    return _ACTIVE[-1] if _ACTIVE else (None, None)
+
+
+def current_mesh() -> Optional[Mesh]:
+    return current()[0]
+
+
+def current_rules() -> Optional[Rules]:
+    return current()[1]
+
+
+@contextlib.contextmanager
+def use_mesh_rules(mesh: Mesh, rules: Rules):
+    """Install (mesh, rules) as the active pair for :func:`shard`."""
+    _ACTIVE.append((mesh, rules))
+    try:
+        yield mesh
+    finally:
+        _ACTIVE.pop()
+
+
+def use_mesh(mesh: Mesh, rules: Optional[Rules] = None, scheme: str = "tp"):
+    """:func:`use_mesh_rules` with the table defaulted from the mesh: the
+    scheme's rules over the mesh's own data axes (``('data',)`` or
+    ``('pod', 'data')``)."""
+    if rules is None:
+        rules = default_rules(mesh, scheme)
+    return use_mesh_rules(mesh, rules)
+
+
+# --------------------------------------------------------- spec construction
+
+def _axis_size(mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        return mesh.shape[axes]
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def _names_of(axes) -> Tuple[str, ...]:
+    if axes is None:
+        return ()
+    return (axes,) if isinstance(axes, str) else tuple(axes)
+
+
+def spec_for(names: Sequence[Optional[str]], rules: Rules) -> P:
+    """Resolve a tuple of logical names to a ``PartitionSpec`` via the table.
+
+    Unknown names and names mapped to ``()`` replicate. A mesh axis may
+    appear at most once per spec — later duplicates are dropped (first
+    occurrence wins), so rule tables with aliased logical names stay valid.
+    """
+    parts = []
+    used: set = set()
+    for name in names:
+        axes = tuple(rules.get(name, ()) or ()) if name is not None else ()
+        axes = tuple(a for a in axes if a not in used)
+        used.update(axes)
+        parts.append(axes if axes else None)
+    return P(*parts)
+
+
+def sanitize_spec(mesh, spec: P, shape: Tuple[int, ...],
+                  relocate: bool = True) -> P:
+    """Divisibility sanitizer, optionally with relocation.
+
+    A mesh-axis assignment that doesn't divide its dim is first *relocated*
+    to the rightmost unsharded dim it does divide (e.g. an 8-KV-head axis on
+    a 16-way model axis moves to head_dim — the standard GQA head-dim-split;
+    an nb=8 MPD block axis moves to the block's output dim — TP within
+    blocks). Only if no dim fits is it dropped (replicated). Without
+    relocation, replicated weights silently multiply compute by the whole
+    model-axis size (measured 16x on the 16x16 mesh — see EXPERIMENTS.md).
+
+    ``relocate=False`` is the activation-constraint policy (:func:`shard`):
+    drop, never relocate — a constraint that second-guesses the annotated
+    dim order would fight GSPMD's propagation instead of anchoring it.
+    """
+    parts = list(spec) + [None] * (len(shape) - len(spec))
+    out = []
+    dropped = []
+    seen: set = set()
+    for dim, axes in zip(shape, parts):
+        names = _names_of(axes)
+        fresh = tuple(a for a in names if a not in seen)
+        seen.update(fresh)
+        if fresh != names:  # drop duplicate mesh axes; keep form otherwise
+            axes = fresh if fresh else None
+        n = _axis_size(mesh, axes)
+        if n == 1 or dim % n == 0:
+            out.append(axes)
+        else:
+            out.append(None)
+            dropped.append(axes)
+
+    if relocate:
+        def used_names():
+            s = set()
+            for a in out:
+                s.update(_names_of(a))
+            return s
+
+        for axes in dropped:
+            if set(_names_of(axes)) & used_names():
+                continue  # a mesh axis may appear at most once per spec
+            n = _axis_size(mesh, axes)
+            for i in range(len(shape) - 1, -1, -1):
+                if out[i] is None and shape[i] % n == 0 and shape[i] >= n:
+                    out[i] = axes
+                    break
+    return P(*out)
+
+
+# ---------------------------------------------------------------- shard()
+
+def shard(x, *logical_axes):
+    """Constrain ``x``'s sharding by logical axis names, or pass through.
+
+    ``shard(x, "batch", None, "heads", None)`` resolves the names against the
+    active rule table and anchors GSPMD propagation with a
+    ``with_sharding_constraint``. ``None`` dims mean *replicated*, so
+    ``"batch"`` must be restated wherever it applies — a constraint's silence
+    is not "don't care". With no active mesh this is the identity, which is
+    what keeps every CPU test running the exact production model code.
+
+    Assignments that don't divide the concrete dim are silently dropped
+    (replicated), never relocated — see :func:`sanitize_spec`.
+    """
+    # arity is validated even with no mesh active, so the CPU suite (which
+    # runs the identity path) still catches a wrong-rank annotation instead
+    # of deferring the crash to the first real launch
+    ndim = getattr(x, "ndim", None)
+    if ndim is None or ndim != len(logical_axes):
+        raise ValueError(
+            f"shard(): got {len(logical_axes)} logical axes for a rank-"
+            f"{ndim} value {getattr(x, 'shape', x)}")
+    mesh, rules = current()
+    if mesh is None or rules is None:
+        return x
+    spec = spec_for(logical_axes, rules)
+    spec = sanitize_spec(mesh, spec, x.shape, relocate=False)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+# ----------------------------------------------------------- pytree placement
+
+def _is_names(t) -> bool:
+    return isinstance(t, tuple) and all(
+        x is None or isinstance(x, str) for x in t)
+
+
+def tree_shardings(mesh: Mesh, rules: Rules, axes_tree,
+                   like=None) -> Any:
+    """``NamedSharding`` pytree from a logical-axis tree.
+
+    ``axes_tree`` carries tuples of logical names at its leaves (the shape of
+    ``Model.axes()`` / ``opt_lib.state_axes``). When ``like`` (a matching
+    pytree of arrays or ShapeDtypeStructs) is supplied, every leaf spec is
+    divisibility-sanitized against the concrete shape, with relocation —
+    the weight-placement policy. Without ``like`` the specs are emitted as
+    resolved (callers own divisibility).
+    """
+    if like is None:
+        return jax.tree.map(
+            lambda names: NamedSharding(mesh, spec_for(tuple(names), rules)),
+            axes_tree, is_leaf=_is_names)
+    flat_a, tdef = jax.tree.flatten(axes_tree, is_leaf=_is_names)
+    flat_l = tdef.flatten_up_to(like)
+    out = []
+    for names, leaf in zip(flat_a, flat_l):
+        spec = spec_for(tuple(names), rules)
+        spec = sanitize_spec(mesh, spec, tuple(leaf.shape))
+        out.append(NamedSharding(mesh, spec))
+    return tdef.unflatten(out)

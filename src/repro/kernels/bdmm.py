@@ -34,6 +34,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from . import tpu_compiler_params
 from .ref import ACTIVATIONS
 
 
@@ -130,7 +131,7 @@ def bdmm(
         out_specs=pl.BlockSpec((bm_, 1, bn_), lambda i, n, j, k: (i, n, j)),
         out_shape=jax.ShapeDtypeStruct((m, nb, bo), out_dtype),
         scratch_shapes=[pltpu.VMEM((bm_, bn_), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

@@ -27,6 +27,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from . import tpu_compiler_params
 from .ref import ACTIVATIONS
 
 
@@ -129,7 +130,7 @@ def masked_matmul(
         out_specs=pl.BlockSpec((bm_, bn_), lambda i, j, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
         scratch_shapes=[pltpu.VMEM((bm_, bn_), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,
@@ -196,7 +197,7 @@ def sddmm_masked(
         out_specs=pl.BlockSpec((bi_, bo_), lambda i, j, t: (i, j)),
         out_shape=jax.ShapeDtypeStruct((d_in, d_out), out_dtype),
         scratch_shapes=[pltpu.VMEM((bi_, bo_), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

@@ -17,11 +17,11 @@ from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.common import SHAPES, ShapeSpec, get_config
 from repro.dist import sharding as sh
+from repro.dist import microbatch as mb_lib
 from repro.models.model import Model, ModelConfig, build
 from repro.optim import OptConfig, optimizer as opt_lib
 from . import mesh as mesh_lib
@@ -29,73 +29,16 @@ from . import mesh as mesh_lib
 SDS = jax.ShapeDtypeStruct
 
 
-# ---------------------------------------------------------------- sanitizer
+# ------------------------------------------------------- sharding derivation
+# The sanitizer and pytree placement moved into repro.dist.sharding; these
+# names stay as thin delegations for existing callers (dryrun, notebooks).
 
-def _axis_size(mesh: Mesh, axes) -> int:
-    if axes is None:
-        return 1
-    if isinstance(axes, str):
-        return mesh.shape[axes]
-    n = 1
-    for a in axes:
-        n *= mesh.shape[a]
-    return n
-
-
-def sanitize_spec(mesh: Mesh, spec: P, shape: Tuple[int, ...]) -> P:
-    """Divisibility sanitizer with relocation.
-
-    A mesh-axis assignment that doesn't divide its dim is first *relocated*
-    to the rightmost unsharded dim it does divide (e.g. an 8-KV-head axis on
-    a 16-way model axis moves to head_dim — the standard GQA head-dim-split;
-    an nb=8 MPD block axis moves to the block's output dim — TP within
-    blocks). Only if no dim fits is it dropped (replicated). Without
-    relocation, replicated weights silently multiply compute by the whole
-    model-axis size (measured 16x on this mesh — see EXPERIMENTS.md §Perf).
-    """
-    parts = list(spec) + [None] * (len(shape) - len(spec))
-    out = []
-    dropped = []
-    for i, (dim, axes) in enumerate(zip(shape, parts)):
-        n = _axis_size(mesh, axes)
-        if n == 1 or dim % n == 0:
-            out.append(axes)
-        else:
-            out.append(None)
-            dropped.append(axes)
-
-    def used_names():
-        s = set()
-        for a in out:
-            if a is None:
-                continue
-            s.update((a,) if isinstance(a, str) else a)
-        return s
-
-    for axes in dropped:
-        names = set((axes,) if isinstance(axes, str) else axes)
-        if names & used_names():
-            continue  # a mesh axis may appear at most once per spec
-        n = _axis_size(mesh, axes)
-        for i in range(len(shape) - 1, -1, -1):
-            if out[i] is None and shape[i] % n == 0 and shape[i] >= n:
-                out[i] = axes
-                break
-    return P(*out)
+sanitize_spec = sh.sanitize_spec
 
 
 def tree_shardings_for(mesh: Mesh, rules: Dict[str, tuple], axes_tree, sds_tree):
     """NamedShardings for a pytree, divisibility-sanitized per leaf shape."""
-    is_names = lambda t: isinstance(t, tuple) and all(
-        x is None or isinstance(x, str) for x in t)
-    flat_a, tdef = jax.tree.flatten(axes_tree, is_leaf=is_names)
-    flat_s = tdef.flatten_up_to(sds_tree)
-    out = []
-    for names, sds in zip(flat_a, flat_s):
-        spec = sh.spec_for(tuple(names), rules)
-        spec = sanitize_spec(mesh, spec, sds.shape)
-        out.append(NamedSharding(mesh, spec))
-    return tdef.unflatten(out)
+    return sh.tree_shardings(mesh, rules, axes_tree, like=sds_tree)
 
 
 # ------------------------------------------------------------------- batches
@@ -149,13 +92,8 @@ class CellProgram:
 def _rules_for(cfg: ModelConfig, mesh: Mesh, shape: ShapeSpec,
                scheme: str) -> Dict[str, tuple]:
     daxes = mesh_lib.data_axes(mesh)
-    if shape.name == "long_500k":
-        rules = sh.long_context_rules(daxes)
-    elif scheme == "block":
-        rules = sh.block_parallel_rules(daxes)
-    else:
-        rules = sh.tp_rules(daxes)
-    return rules
+    key = "long_context" if shape.name == "long_500k" else scheme
+    return sh.rules_for_scheme(key, daxes)
 
 
 def make_cell(arch: str, shape_name: str, mesh: Mesh, *,
@@ -199,40 +137,19 @@ def make_cell(arch: str, shape_name: str, mesh: Mesh, *,
         b_sds = batch_specs(cfg, shape)
         b_shard = tree_shardings_for(mesh, rules, batch_axes(cfg), b_sds)
 
-        # cap accumulation so each microbatch still divides the batch mesh axes
-        ways = 1
-        for a in mesh_lib.data_axes(mesh):
-            ways *= mesh.shape[a]
-        accum = max(grad_accum, 1)
-        while accum > 1 and (shape.global_batch % accum
-                             or (shape.global_batch // accum) % ways):
-            accum -= 1
+        # cap accumulation so each microbatch still divides the batch mesh
+        # axes — same derivation the train step uses, so meta reports the
+        # split that actually runs
+        accum = mb_lib.cap_microbatches(
+            shape.global_batch, max(grad_accum, 1),
+            mb_lib.batch_ways(mesh, rules))
         meta["grad_accum"] = accum
 
         def train_step(params, opt_state, batch):
             with sh.use_mesh_rules(mesh, rules):
                 if accum > 1:
-                    mb = shape.global_batch // accum
-                    # microbatch via reshape + scan-over-xs: scan's static
-                    # leading-axis slicing preserves GSPMD batch sharding
-                    # (a traced dynamic_slice on the sharded batch axis
-                    # would force an all-gather of the whole batch).
-                    mbs = jax.tree.map(
-                        lambda x: sh.shard(
-                            x.reshape((accum, mb) + x.shape[1:]),
-                            None, "batch", *([None] * (x.ndim - 1))),
-                        batch)
-
-                    def acc_body(g_acc, sub):
-                        l, g = jax.value_and_grad(model.train_loss)(params, sub)
-                        g_acc = jax.tree.map(lambda a, b: a + b / accum,
-                                             g_acc, g)
-                        return g_acc, l / accum
-
-                    zeros = jax.tree.map(
-                        lambda p: jnp.zeros(p.shape, p.dtype), params)
-                    grads, losses = jax.lax.scan(acc_body, zeros, mbs)
-                    loss = losses.sum()
+                    loss, grads = mb_lib.microbatched_value_and_grad(
+                        model.train_loss, params, batch, accum)
                 else:
                     loss, grads = jax.value_and_grad(model.train_loss)(
                         params, batch)

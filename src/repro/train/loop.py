@@ -10,7 +10,6 @@ in/out shardings derived from the model's logical-axis trees.
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
@@ -19,6 +18,7 @@ import jax.numpy as jnp
 from repro.checkpoint import checkpoint as ckpt_lib
 from repro.dist import compress as compress_lib
 from repro.dist import sharding as sh
+from repro.dist.microbatch import microbatched_value_and_grad
 from repro.dist.straggler import StragglerMonitor
 from repro.models.model import Model
 from repro.optim import optimizer as opt_lib
@@ -48,21 +48,12 @@ def make_train_step(model: Model, tcfg: TrainConfig,
 
     def step(params, opt_state, ef_state, batch):
         if tcfg.microbatch and batch["labels"].shape[0] > tcfg.microbatch:
-            # gradient accumulation over microbatches (sequential, constant mem)
             B = batch["labels"].shape[0]
             mb = tcfg.microbatch
             n = B // mb
-            def acc_body(carry, i):
-                loss_acc, g_acc = carry
-                sub = jax.tree.map(
-                    lambda x: jax.lax.dynamic_slice_in_dim(x, i * mb, mb, 0),
-                    batch)
-                l, g = jax.value_and_grad(loss_fn)(params, sub)
-                return (loss_acc + l / n,
-                        jax.tree.map(lambda a, b: a + b / n, g_acc, g)), None
-            zeros = jax.tree.map(jnp.zeros_like, params)
-            (loss, grads), _ = jax.lax.scan(
-                acc_body, (jnp.zeros(()), zeros), jnp.arange(n))
+            if B % mb:  # drop the remainder rows (as the slicing loop did)
+                batch = jax.tree.map(lambda x: x[: n * mb], batch)
+            loss, grads = microbatched_value_and_grad(loss_fn, params, batch, n)
         else:
             loss, grads = jax.value_and_grad(loss_fn)(params, batch)
         if bits > 0:
@@ -76,7 +67,7 @@ def make_train_step(model: Model, tcfg: TrainConfig,
 
 
 def setup(model: Model, tcfg: TrainConfig, key,
-          mesh=None, rules=None) -> Tuple[Any, Any, Any, Callable]:
+          mesh=None, rules=None) -> Tuple[Any, Any, Any, Callable, int]:
     """Init (or resume) params/opt/ef state, placed per the sharding rules."""
     params = model.init(key)
     opt_state = opt_lib.init_state(tcfg.opt, params)
@@ -84,27 +75,50 @@ def setup(model: Model, tcfg: TrainConfig, key,
                 if tcfg.grad_compress_bits > 0 else {})
 
     step_fn = make_train_step(model, tcfg)
-    if mesh is not None:
-        params_sh = sh.tree_shardings(mesh, rules, model.axes())
-        params = jax.device_put(params, params_sh)
+    opt_axes = opt_lib.state_axes(tcfg.opt, model.axes())
+    if mesh is not None and rules is None:
+        rules = sh.default_rules(mesh)
+
+    # auto-resume first (elastic: the checkpoint's mesh need not match ours —
+    # leaves are stored logically and re-placed through the repro.dist rule
+    # table). Restoring before any device placement means the freshly
+    # initialized state serves only as the host-side `like` tree: no wasted
+    # transfer, no transient double-placement HBM footprint.
+    start_step = 0
+    last = ckpt_lib.latest_step(tcfg.ckpt_dir) if tcfg.ckpt_dir else None
+    if last is not None:
+        state = {"params": params, "opt": opt_state}
+        if mesh is not None:
+            state = ckpt_lib.restore_with_shardings(
+                tcfg.ckpt_dir, last, state,
+                axes={"params": model.axes(), "opt": opt_axes},
+                mesh=mesh, rules=rules)
+        else:
+            state = ckpt_lib.restore(tcfg.ckpt_dir, last, state)
+        params, opt_state = state["params"], state["opt"]
+        start_step = last
+    elif mesh is not None:
+        params = jax.device_put(
+            params, sh.tree_shardings(mesh, rules, model.axes(), like=params))
         # ZeRO-1: moments sharded like params (further sharding over 'data'
         # is expressed by a rule table that maps extra axes).
-        opt_axes = opt_lib.state_axes(tcfg.opt, model.axes())
         opt_state = jax.device_put(
-            opt_state, sh.tree_shardings(mesh, rules, opt_axes))
-        step_fn = jax.jit(step_fn, donate_argnums=(0, 1, 2))
-    else:
-        step_fn = jax.jit(step_fn, donate_argnums=(0, 1, 2))
+            opt_state, sh.tree_shardings(mesh, rules, opt_axes, like=opt_state))
 
-    # auto-resume
-    start_step = 0
-    if tcfg.ckpt_dir:
-        last = ckpt_lib.latest_step(tcfg.ckpt_dir)
-        if last is not None:
-            state = {"params": params, "opt": opt_state}
-            state = ckpt_lib.restore(tcfg.ckpt_dir, last, state)
-            params, opt_state = state["params"], state["opt"]
-            start_step = last
+    if mesh is not None:
+        # the model's shard() constraints only bite inside the context, and
+        # the host batch arrives uncommitted — constrain it onto the data
+        # axes or every device would compute the full global batch
+        base_step = step_fn
+
+        def step_fn(params, opt_state, ef_state, batch):
+            with sh.use_mesh_rules(mesh, rules):
+                batch = jax.tree.map(
+                    lambda x: sh.shard(x, "batch", *([None] * (x.ndim - 1))),
+                    batch)
+                return base_step(params, opt_state, ef_state, batch)
+
+    step_fn = jax.jit(step_fn, donate_argnums=(0, 1, 2))
     return params, opt_state, ef_state, step_fn, start_step
 
 

@@ -1,0 +1,179 @@
+"""repro.dist.sharding: rule resolution, divisibility sanitizing, the
+no-mesh identity path, shard() on a forced host mesh, and the elastic
+checkpoint round-trip through a resharded mesh.
+
+Pure rule/spec logic runs in-process (no devices touched); anything needing
+a real mesh runs in a subprocess with 8 forced host devices, following the
+repo convention (the main pytest process keeps 1 device)."""
+
+import types
+
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from conftest import run_forced_device_subprocess as _run_subprocess
+from repro.dist import sharding as sh
+
+
+# ------------------------------------------------------------- rule tables
+
+def test_tp_rules_shape():
+    r = sh.tp_rules()
+    assert r["batch"] == ("data",)
+    assert r["heads"] == ("model",) and r["kv_heads"] == ("model",)
+    assert r["vocab"] == ("model",) and r["blocks"] == ("model",)
+    assert r["embed"] == () and r["layers"] == ()
+    # multi-pod data axes thread through
+    assert sh.tp_rules(("pod", "data"))["batch"] == ("pod", "data")
+
+
+def test_scheme_tables_differ_where_it_matters():
+    blk = sh.block_parallel_rules()
+    assert blk["blocks"] == ("model",)   # MPD block axis carries the TP
+    assert blk["heads"] == () and blk["ffn"] == ()  # head structure replicated
+    lng = sh.long_context_rules()
+    assert lng["kv_seq"] == ("model",)
+    # a mesh axis may appear once per spec: heads must vacate for kv_seq
+    assert lng["heads"] == () and lng["kv_heads"] == ()
+    assert sh.rules_for_scheme("tp") == sh.tp_rules()
+
+
+def test_spec_for_resolution():
+    rules = sh.tp_rules()
+    assert sh.spec_for(("batch", None, "heads", None), rules) == P(
+        ("data",), None, ("model",), None)
+    # unknown logical names replicate rather than raise
+    assert sh.spec_for(("no_such_axis", "embed"), rules) == P(None, None)
+    # duplicate mesh axes: first occurrence wins
+    assert sh.spec_for(("heads", "vocab"), rules) == P(("model",), None)
+
+
+# --------------------------------------------------------------- sanitizer
+
+def _fake_mesh(**shape):
+    return types.SimpleNamespace(shape=dict(shape))
+
+
+def test_sanitize_divisible_passes_through():
+    mesh = _fake_mesh(data=2, model=4)
+    spec = P(("data",), None, ("model",))
+    assert sh.sanitize_spec(mesh, spec, (4, 3, 8)) == spec
+
+
+def test_sanitize_indivisible_drops_without_relocation():
+    mesh = _fake_mesh(data=2, model=4)
+    # 2 KV heads on a 4-way model axis: dropped (GQA KV replicated over TP)
+    spec = P(None, None, ("model",), None)
+    assert sh.sanitize_spec(mesh, spec, (4, 16, 2, 64), relocate=False) == P(
+        None, None, None, None)
+
+
+def test_sanitize_relocates_to_dividing_dim():
+    mesh = _fake_mesh(data=2, model=4)
+    # weight-placement policy: the dropped model axis moves to the rightmost
+    # dim it divides (the GQA head-dim split / intra-block TP)
+    got = sh.sanitize_spec(mesh, P(("model",), None), (6, 128))
+    assert got == P(None, ("model",))
+    # nothing divides -> fully replicated
+    got = sh.sanitize_spec(mesh, P(("model",), None), (6, 9))
+    assert got == P(None, None)
+
+
+# ------------------------------------------------------- no-mesh identity
+
+def test_shard_is_identity_without_mesh():
+    assert sh.current() == (None, None)
+    x = jnp.ones((4, 8))
+    assert sh.shard(x, "batch", None) is x
+    assert sh.shard(x, "no_such_axis", "heads") is x  # names never validated
+
+
+def test_shard_rank_mismatch_raises():
+    import pytest
+
+    # even on the no-mesh identity path: CPU tests must catch bad arity
+    with pytest.raises(ValueError):
+        sh.shard(jnp.ones((4, 8)), "batch")
+    with sh.use_mesh_rules(object(), sh.tp_rules()):
+        with pytest.raises(ValueError):
+            sh.shard(jnp.ones((4, 8)), "batch")
+
+
+# ------------------------------------------- multi-device subprocess tests
+
+def test_shard_resolves_on_host_mesh():
+    """shard() under make_host_mesh(2, 4): batch splits over data, heads over
+    model, and an indivisible kv_heads assignment is dropped (replicated)."""
+    _run_subprocess("""
+import jax, jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.dist import sharding as sh
+from repro.dist.mesh import make_host_mesh
+
+mesh = make_host_mesh(2, 4)
+rules = sh.tp_rules()
+
+with sh.use_mesh_rules(mesh, rules):
+    assert sh.current_mesh() is mesh and sh.current_rules() is rules
+    q = jax.jit(lambda x: sh.shard(x, "batch", None, "heads", None))(
+        jnp.zeros((4, 8, 8, 16)))
+    want = NamedSharding(mesh, P("data", None, "model", None))
+    assert q.sharding.is_equivalent_to(want, q.ndim), q.sharding
+    assert q.addressable_shards[0].data.shape == (2, 8, 2, 16)
+
+    # 2 KV heads on the 4-way model axis: silently dropped -> replicated
+    k = jax.jit(lambda x: sh.shard(x, "batch", None, "kv_heads", None))(
+        jnp.zeros((4, 8, 2, 16)))
+    want = NamedSharding(mesh, P("data", None, None, None))
+    assert k.sharding.is_equivalent_to(want, k.ndim), k.sharding
+assert sh.current() == (None, None)
+
+# use_mesh defaults the table from the mesh's own data axes
+with sh.use_mesh(mesh):
+    y = jax.jit(lambda x: sh.shard(x, "batch", "vocab"))(jnp.zeros((4, 8)))
+    want = NamedSharding(mesh, P("data", "model"))
+    assert y.sharding.is_equivalent_to(want, y.ndim), y.sharding
+print("OK")
+""")
+
+
+def test_restore_with_shardings_reshards():
+    """Elastic restore: params saved from a (2,4) placement come back placed
+    by the rule table on a (4,2) mesh — same bytes, new partitioning."""
+    _run_subprocess("""
+import tempfile
+import jax, jax.numpy as jnp, numpy as np
+from repro.checkpoint import checkpoint as ck
+from repro.dist import sharding as sh
+from repro.dist.mesh import make_host_mesh
+from repro.models import ModelConfig, build
+
+cfg = ModelConfig(n_layers=2, d_model=64, n_heads=4, n_kv_heads=4, d_ff=128,
+                  vocab=64, mpd_c=4)
+m = build(cfg)
+rules = sh.tp_rules()
+p = m.init(jax.random.PRNGKey(0))
+
+mesh1 = make_host_mesh(2, 4)
+p1 = jax.device_put(p, sh.tree_shardings(mesh1, rules, m.axes(), like=p))
+d = tempfile.mkdtemp()
+ck.save(d, 3, p1)
+
+mesh2 = make_host_mesh(4, 2)  # resharded boot: data 2->4, model 4->2
+like = jax.tree.map(jnp.zeros_like, p)
+p2 = ck.restore_with_shardings(d, 3, like, axes=m.axes(),
+                               mesh=mesh2, rules=rules)
+for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+embed2 = p2["embed"]["table"]
+assert embed2.sharding.mesh.shape == {"data": 4, "model": 2}
+assert embed2.addressable_shards[0].data.shape == (32, 64)  # vocab/2
+
+# with no mesh argument the active context decides; no context -> host arrays
+p3 = ck.restore_with_shardings(d, 3, like, axes=m.axes())
+assert isinstance(jax.tree.leaves(p3)[0], np.ndarray)
+with sh.use_mesh_rules(mesh2, rules):
+    p4 = ck.restore_with_shardings(d, 3, like, axes=m.axes())
+assert p4["embed"]["table"].sharding.mesh.shape == {"data": 4, "model": 2}
+print("OK")
+""")

@@ -1,19 +1,7 @@
 """HLO collective-parser validation: loop-scaled collective bytes from a
 scanned program must match the unrolled program's direct count."""
 
-import os
-import subprocess
-import sys
-
-
-def _run(code: str) -> str:
-    env = dict(os.environ)
-    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
-    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
-                       text=True, env=env, timeout=600)
-    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
-    return r.stdout
+from conftest import run_forced_device_subprocess as _run
 
 
 def test_loop_scaling_matches_unrolled():
