@@ -7,6 +7,7 @@ Prints ``name,value,derived`` CSV rows. Sections:
   * fig5_*     — sparsity sweep (4x / 8x / 16x)
   * speedup_*  — dense vs masked vs packed wall-clock (paper §3.3)
   * bdmm_* / masked_matmul_* — kernel-path microbenches
+  * serve,*    — static vs continuous-batching throughput (BENCH_serve.json)
   * roofline,* — per-cell roofline terms from the dry-run sweep (if present)
 
 ``--fast`` trims step counts for CI-style runs; the full run reproduces the
@@ -24,7 +25,8 @@ def main() -> None:
                     help="fewer train steps / masks (smoke-level)")
     ap.add_argument("--skip-roofline", action="store_true")
     ap.add_argument("--sections", default="",
-                    help="comma list: table1,fig4,fig5,speedup,kernels,roofline")
+                    help="comma list: table1,fig4,fig5,speedup,kernels,"
+                         "serve,roofline")
     args = ap.parse_args()
     want = set(args.sections.split(",")) if args.sections else None
 
@@ -48,6 +50,9 @@ def main() -> None:
         rows += speedup.layer_speedup()
     if on("kernels"):
         rows += speedup.kernel_bench()
+    if on("serve"):
+        from benchmarks import serve_bench
+        rows += serve_bench.rows(smoke=args.fast)
     for r in rows:
         print(r)
 

@@ -1,0 +1,202 @@
+"""Serving throughput: static waves vs continuous batching (BENCH_serve.json).
+
+Replays one Poisson request stream (variable output budgets, shared prompt
+length so the static path stays well-defined) through both serving modes at
+several arrival rates and ``mpd_c`` compression factors:
+
+* **static** — the legacy lockstep path run in FCFS waves of ``n_slots``:
+  a wave starts only when its last member has arrived, prefills as one
+  batch, and decodes until its *longest* member finishes (early finishers
+  idle their slot — the cost continuous batching removes);
+* **continuous** — the ``repro.serve`` engine: per-request admission into
+  free slots the moment they open, per-request stops, backfill from the
+  queue.
+
+Both paths are wall-clock timed after a compile warmup; each emits
+aggregate tok/s (useful tokens / makespan), mean TTFT, and makespan.
+``--smoke`` trims the grid for CI; ``benchmarks/run.py --sections serve``
+prints the same rows in its CSV format.
+"""
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _config(mpd_c):
+    # big enough that a decode step is compute-bound (not dispatch-bound) on
+    # the CI CPU — the regime where slot utilization decides throughput
+    from repro.models import ModelConfig
+    return ModelConfig(name=f"serve-bench-c{mpd_c}", n_layers=2, d_model=256,
+                       n_heads=8, n_kv_heads=4, d_ff=512, vocab=512,
+                       mpd_c=mpd_c)
+
+
+def _requests(cfg, *, n, rate, prompt_len, max_gen, seed):
+    from repro.serve import Request
+    rng = np.random.default_rng(seed)
+    toks = rng.integers(0, cfg.vocab, size=(n, prompt_len)).astype(np.int32)
+    t = 0.0
+    out = []
+    for i in range(n):
+        t += rng.exponential(1.0 / rate)
+        # bimodal output budgets (mixed chat traffic): lockstep waves decode
+        # to the longest member, so short requests strand their slots — the
+        # waste continuous batching reclaims by backfilling
+        if rng.random() < 0.5:
+            gen = int(rng.integers(2, max(max_gen // 8, 3)))
+        else:
+            gen = int(rng.integers(max_gen - max_gen // 4, max_gen + 1))
+        out.append(Request(id=i, prompt=toks[i], max_new_tokens=gen,
+                           arrival_time=t))
+    return out
+
+
+def _wait_until(t0, t_rel):
+    while time.perf_counter() - t0 < t_rel:
+        time.sleep(0.0005)
+
+
+_static_fns = {}
+_engines = {}
+
+
+def run_static(model, params, requests, *, n_slots, max_len):
+    """FCFS waves of up to n_slots, lockstep decode to the wave's longest
+    member. Returns (agg_tok_s, ttft_mean, makespan)."""
+    if id(model) not in _static_fns:        # compile once per config
+        _static_fns[id(model)] = (jax.jit(model.prefill),
+                                  jax.jit(model.decode_step))
+    prefill, decode = _static_fns[id(model)]
+    # warmup (compile outside the timed region)
+    warm_p = jnp.zeros((n_slots, len(requests[0].prompt)), jnp.int32)
+    lg, c = prefill(params, warm_p, model.init_caches(n_slots, max_len))
+    jax.block_until_ready(decode(params, jnp.argmax(lg, -1), c)[0])
+
+    t0 = time.perf_counter()
+    ttfts, done_t = [], []
+    total_tokens = 0
+    i = 0
+    while i < len(requests):
+        wave = requests[i:i + n_slots]
+        i += len(wave)
+        _wait_until(t0, max(r.arrival_time for r in wave))
+        batch = np.stack([r.prompt for r in wave]
+                         + [wave[-1].prompt] * (n_slots - len(wave)))
+        caches = model.init_caches(n_slots, max_len)
+        lg, caches = prefill(params, jnp.asarray(batch), caches)
+        tok = jnp.argmax(lg, -1)
+        jax.block_until_ready(tok)
+        now = time.perf_counter() - t0
+        for r in wave:
+            ttfts.append(now - r.arrival_time)
+        total_tokens += len(wave)
+        gen = 1
+        for _ in range(max(r.max_new_tokens for r in wave) - 1):
+            lg, caches = decode(params, tok, caches)
+            tok = jnp.argmax(lg, -1)
+            jax.block_until_ready(tok)
+            gen += 1
+            now = time.perf_counter() - t0
+            for r in wave:
+                if r.max_new_tokens >= gen:
+                    total_tokens += 1
+                if r.max_new_tokens == gen:
+                    done_t.append(now)
+        if max(r.max_new_tokens for r in wave) == 1:
+            done_t.append(now)
+    makespan = max(done_t)
+    return total_tokens / makespan, float(np.mean(ttfts)), makespan
+
+
+def run_continuous(model, params, requests, *, n_slots, max_len):
+    from repro.launch.serve import serve_stream
+    from repro.serve import Engine, Request, ServeMetrics
+
+    key = (id(model), n_slots, max_len)
+    if key not in _engines:                 # build + compile once per config
+        engine = _engines[key] = Engine(model, params, n_slots=n_slots,
+                                        max_len=max_len)
+        warm = [Request(id=-1 - i, prompt=np.zeros(len(requests[0].prompt),
+                                                   np.int32), max_new_tokens=2)
+                for i in range(2)]
+        engine.run(warm)
+    engine = _engines[key]
+    engine.params = params          # cache hit must not pin stale weights
+    engine.metrics = ServeMetrics()
+    s = serve_stream(engine, requests)
+    makespan = max(m.t_done for m in engine.metrics.requests.values())
+    return s["total_tokens"] / makespan, s["ttft_mean_s"], makespan
+
+
+def bench(*, smoke=True, seed=0, out="BENCH_serve.json", trials=3):
+    from repro.models import build
+
+    # Decode-dominated chat shape: short prompts, long bimodal outputs.
+    # rate 16 is arrival-bound (both modes keep up; TTFT is the signal);
+    # rate 256 queues several waves behind the slots — the regime where
+    # lockstep waste costs static real throughput.
+    n_slots, prompt_len, max_gen = 8, 8, 48 if smoke else 64
+    n_req = 32 if smoke else 64
+    rates = (16.0, 256.0) if smoke else (8.0, 64.0, 256.0)
+    cs = (1, 8)
+    max_len = prompt_len + max_gen
+
+    result = {"meta": {"n_slots": n_slots, "prompt_len": prompt_len,
+                       "max_gen": max_gen, "n_requests": n_req,
+                       "seed": seed, "smoke": smoke, "trials": trials},
+              "rows": []}
+    for c in cs:
+        cfg = _config(c)
+        model = build(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        for rate in rates:
+            for mode, runner in (("static", run_static),
+                                 ("continuous", run_continuous)):
+                runs = []
+                for _ in range(trials):      # wall-clock noise: keep median
+                    reqs = _requests(cfg, n=n_req, rate=rate,
+                                     prompt_len=prompt_len, max_gen=max_gen,
+                                     seed=seed)
+                    runs.append(runner(model, params, reqs,
+                                       n_slots=n_slots, max_len=max_len))
+                tok_s, ttft, makespan = sorted(runs)[len(runs) // 2]
+                result["rows"].append({
+                    "mode": mode, "mpd_c": c, "rate": rate,
+                    "tok_s": round(tok_s, 2), "ttft_mean_s": round(ttft, 4),
+                    "makespan_s": round(makespan, 3)})
+    if out:
+        with open(out, "w") as f:
+            json.dump(result, f, indent=1)
+    return result
+
+
+def rows(smoke=True, out="BENCH_serve.json"):
+    """CSV rows in the benchmarks/run.py format."""
+    result = bench(smoke=smoke, out=out)
+    lines = []
+    for r in result["rows"]:
+        tag = f"{r['mode']}_c{r['mpd_c']}_rate{int(r['rate'])}"
+        lines.append(f"serve,{tag}_tok_s,{r['tok_s']}")
+        lines.append(f"serve,{tag}_ttft_ms,{round(r['ttft_mean_s']*1e3, 1)}")
+    return lines
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default="BENCH_serve.json")
+    args = ap.parse_args()
+    result = bench(smoke=args.smoke, seed=args.seed, out=args.out)
+    for r in result["rows"]:
+        print(r)
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -25,7 +25,7 @@ out = run(model, TrainConfig(opt=OptConfig(lr=3e-3, clip_norm=1.0),
 # --- serve a few tokens ---------------------------------------------------
 params = out["params"]
 prompt = jnp.asarray(data.next()["inputs"][:2, :16])
-caches = model.init_caches(batch=2, max_len=32, dtype=jnp.float32)
+caches = model.init_caches(batch=2, max_len=32)
 logits, caches = jax.jit(model.prefill)(params, prompt, caches)
 toks = []
 tok = jnp.argmax(logits, -1)

@@ -20,7 +20,7 @@ BATCH, PROMPT, GEN, MAXLEN = 8, 32, 16, 64
 data = SyntheticLM(vocab=cfg.vocab, seq_len=PROMPT, global_batch=BATCH, seed=0)
 prompts = jnp.asarray(data.next()["inputs"])
 
-caches = model.init_caches(BATCH, MAXLEN, dtype=jnp.float32)
+caches = model.init_caches(BATCH, MAXLEN)
 prefill = jax.jit(model.prefill)
 decode = jax.jit(model.decode_step)
 

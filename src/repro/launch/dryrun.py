@@ -84,7 +84,6 @@ def _cal_cost(arch, shape_name, mesh, scheme, mpd_mode, mpd_c,
     from repro.models.model import build
     from repro.optim import OptConfig, optimizer as opt_lib
     from repro.dist import sharding as sh
-    import jax.numpy as jnp
 
     shape = SHAPES[shape_name]
     cfg = get_config(arch, mpd_c=mpd_c, mpd_mode=mpd_mode, mpd_fuse=mpd_fuse)
@@ -128,8 +127,7 @@ def _cal_cost(arch, shape_name, mesh, scheme, mpd_mode, mpd_c,
         b_shard = specs_lib.tree_shardings_for(
             mesh, rules, {"x": specs_lib.batch_axes(cfg)["inputs"]},
             {"x": b_sds})["x"]
-        cache_sds = jax.eval_shape(lambda: model.init_caches(
-            B, seqlen, dtype=jnp.bfloat16))
+        cache_sds = jax.eval_shape(lambda: model.init_caches(B, seqlen))
         cache_shard = specs_lib.tree_shardings_for(
             mesh, rules, model.cache_axes(), cache_sds)
 

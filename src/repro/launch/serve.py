@@ -1,36 +1,33 @@
-"""Production serving launcher: prefill + batched decode for --arch <id>.
+"""Production serving launcher for --arch <id>.
 
-Mirrors examples/serve_batched.py but config-driven; on a real slice pass
---mesh to shard (decode KV caches shard per the long-context rules).
+Default mode drives the ``repro.serve`` continuous-batching engine from a
+synthetic Poisson request stream: requests with variable prompt/output
+lengths arrive over wall-clock time, are admitted FCFS into cache slots,
+and decode as one fixed-shape batch with per-request stop conditions.
+
+``--static`` keeps the legacy path: prefill one fixed batch, decode it in
+lockstep (no admission, no per-request stop) — the baseline the engine is
+benchmarked against in ``benchmarks/serve_bench.py``.
+
+On a real slice pass a mesh via ``repro.dist`` (engine slot caches shard
+through ``Model.slot_cache_axes()`` + the active rule table).
 """
 
 import argparse
+import collections
 import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.common import ARCHS, get_config
 from repro.data import SyntheticLM
 from repro.models import build
 
 
-def main(argv=None):
-    p = argparse.ArgumentParser()
-    p.add_argument("--arch", choices=ARCHS, required=True)
-    p.add_argument("--smoke", action="store_true")
-    p.add_argument("--batch", type=int, default=4)
-    p.add_argument("--prompt-len", type=int, default=32)
-    p.add_argument("--gen", type=int, default=16)
-    args = p.parse_args(argv)
-
-    cfg = get_config(args.arch, smoke=args.smoke)
-    if not cfg.causal:
-        raise SystemExit(f"{args.arch} is encoder-only (no decode)")
-    model = build(cfg)
-    params = model.init(jax.random.PRNGKey(0))
-    print(f"serving {cfg.name}: {model.param_count():,} params")
-
+def _static_main(args, cfg, model, params):
+    """Legacy static-batch path: one prefill, lockstep decode."""
     maxlen = args.prompt_len + args.gen
     if cfg.frontend == "token":
         data = SyntheticLM(vocab=cfg.vocab, seq_len=args.prompt_len,
@@ -40,7 +37,7 @@ def main(argv=None):
         prompts = jax.random.normal(
             jax.random.PRNGKey(1), (args.batch, args.prompt_len, cfg.d_model))
 
-    caches = model.init_caches(args.batch, maxlen, dtype=jnp.float32)
+    caches = model.init_caches(args.batch, maxlen)
     prefill = jax.jit(model.prefill)
     decode = jax.jit(model.decode_step)
 
@@ -50,17 +47,119 @@ def main(argv=None):
     print(f"prefill {args.batch}x{args.prompt_len}: "
           f"{(time.perf_counter()-t0)*1e3:.1f} ms")
 
+    if cfg.frontend != "token":
+        # embed frontends have no incremental token stream to feed back;
+        # timing an empty loop would report a bogus decode rate.
+        print("decode: skipped (embed frontend — no autoregressive "
+              "token stream)")
+        return
+
     tok = jnp.argmax(logits, -1)
     t0 = time.perf_counter()
     for _ in range(args.gen - 1):
-        if cfg.frontend != "token":
-            break
         logits, caches = decode(params, tok, caches)
         tok = jnp.argmax(logits, -1)
     jax.block_until_ready(tok)
     dt = time.perf_counter() - t0
     print(f"decode {args.gen-1} steps: {dt*1e3:.1f} ms "
           f"({args.batch*(args.gen-1)/max(dt,1e-9):.0f} tok/s)")
+
+
+def make_requests(cfg, *, n_requests, rate, prompt_len, gen, seed=0):
+    """Synthetic Poisson request stream: exponential inter-arrivals at
+    ``rate`` req/s, prompt lengths in [prompt_len/2, prompt_len], output
+    budgets in [gen/2, gen]."""
+    from repro.serve import Request, SamplingParams
+
+    if rate <= 0:
+        raise ValueError(f"arrival rate must be positive, got {rate}")
+    rng = np.random.default_rng(seed)
+    data = SyntheticLM(vocab=cfg.vocab, seq_len=prompt_len,
+                       global_batch=max(n_requests, 1), seed=seed)
+    toks = np.asarray(data.next()["inputs"])
+    t = 0.0
+    out = []
+    for i in range(n_requests):
+        t += rng.exponential(1.0 / rate)
+        plen = int(rng.integers(max(prompt_len // 2, 1), prompt_len + 1))
+        out.append(Request(
+            id=i, prompt=toks[i, :plen],
+            max_new_tokens=int(rng.integers(max(gen // 2, 1), gen + 1)),
+            sampling=SamplingParams(temperature=0.0, seed=seed * 1000 + i),
+            arrival_time=t))
+    return out
+
+
+def serve_stream(engine, requests, *, idle_sleep=0.0005):
+    """Wall-clock drive loop: submit each request when its arrival time
+    elapses, step the engine whenever it has work. Returns the metrics
+    summary."""
+    pending = collections.deque(
+        sorted(requests, key=lambda r: r.arrival_time or 0.0))
+    t0 = time.perf_counter()
+    engine.metrics.clock = lambda: time.perf_counter() - t0
+    while pending or engine.has_work():
+        now = time.perf_counter() - t0
+        while pending and (pending[0].arrival_time or 0.0) <= now:
+            engine.submit(pending.popleft())
+        if engine.has_work():
+            engine.step()
+        elif pending:
+            time.sleep(min(idle_sleep,
+                           max((pending[0].arrival_time or 0.0) - now, 0)))
+    return engine.metrics.summary()
+
+
+def _continuous_main(args, cfg, model, params):
+    from repro.serve import Engine
+
+    max_len = args.prompt_len + args.gen
+    engine = Engine(model, params, n_slots=args.slots, max_len=max_len)
+    requests = make_requests(cfg, n_requests=args.requests, rate=args.rate,
+                             prompt_len=args.prompt_len, gen=args.gen,
+                             seed=args.seed)
+    summary = serve_stream(engine, requests)
+    print(f"continuous: {summary['n_done']}/{summary['n_requests']} requests, "
+          f"{summary['total_tokens']} tokens in {summary['elapsed_s']:.2f} s "
+          f"({summary['agg_tok_s']:.0f} tok/s)")
+    print(f"ttft mean/p50/p95: {summary['ttft_mean_s']*1e3:.0f}/"
+          f"{summary['ttft_p50_s']*1e3:.0f}/{summary['ttft_p95_s']*1e3:.0f} ms; "
+          f"slot occupancy {summary['occupancy_mean']*100:.0f}%")
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", choices=ARCHS, required=True)
+    p.add_argument("--smoke", action="store_true")
+    p.add_argument("--static", action="store_true",
+                   help="legacy fixed-batch lockstep path")
+    p.add_argument("--batch", type=int, default=4, help="static-mode batch")
+    p.add_argument("--prompt-len", type=int, default=32)
+    p.add_argument("--gen", type=int, default=16)
+    p.add_argument("--requests", type=int, default=16,
+                   help="continuous-mode request count")
+    p.add_argument("--rate", type=float, default=16.0,
+                   help="continuous-mode Poisson arrival rate (req/s)")
+    p.add_argument("--slots", type=int, default=4,
+                   help="continuous-mode decode slots")
+    p.add_argument("--seed", type=int, default=0)
+    args = p.parse_args(argv)
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    if not cfg.causal:
+        raise SystemExit(f"{args.arch} is encoder-only (no decode)")
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    print(f"serving {cfg.name}: {model.param_count():,} params")
+
+    if args.static:
+        _static_main(args, cfg, model, params)
+    else:
+        if cfg.frontend != "token":
+            raise SystemExit(
+                f"{args.arch} has an embed frontend — the continuous engine "
+                "serves token streams; use --static for prefill timing")
+        _continuous_main(args, cfg, model, params)
 
 
 if __name__ == "__main__":

@@ -63,8 +63,7 @@ def decode_specs(model: Model, shape: ShapeSpec) -> Tuple[Any, Any]:
     cache."""
     cfg = model.cfg
     B, S = shape.global_batch, shape.seq_len
-    caches = jax.eval_shape(
-        lambda: model.init_caches(B, S, dtype=jnp.bfloat16))
+    caches = jax.eval_shape(lambda: model.init_caches(B, S))
     if cfg.frontend == "token":
         tok = SDS((B,), jnp.int32)
     else:
@@ -170,8 +169,7 @@ def make_cell(arch: str, shape_name: str, mesh: Mesh, *,
         b_shard = tree_shardings_for(
             mesh, rules, {"x": batch_axes(cfg)["inputs"]}, {"x": b_sds})["x"]
         cache_sds = jax.eval_shape(
-            lambda: model.init_caches(shape.global_batch, shape.seq_len,
-                                      dtype=jnp.bfloat16))
+            lambda: model.init_caches(shape.global_batch, shape.seq_len))
         cache_shard = tree_shardings_for(mesh, rules, model.cache_axes(),
                                          cache_sds)
 

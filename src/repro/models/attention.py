@@ -184,8 +184,22 @@ def init_cache(spec: AttentionSpec, batch: int, max_len: int, dtype=jnp.bfloat16
             "pos": jnp.zeros((), jnp.int32)}
 
 
+def _update_rows(cache, new, pos):
+    """Write ``new`` (B, 1, Kh, Dh) into ``cache`` (B, S, Kh, Dh) at a
+    *per-row* sequence position ``pos`` (B,) — the slot-cache write used by
+    continuous batching, where every slot sits at its own depth."""
+    return jax.vmap(
+        lambda c, n, p: jax.lax.dynamic_update_slice_in_dim(c, n, p, axis=0)
+    )(cache, new, pos)
+
+
 def apply_decode(spec: AttentionSpec, params, x, cache):
     """One decode step. x: (B, 1, D); cache K/V: (B, S, Kh, Dh).
+
+    ``cache["pos"]`` is either a scalar (lockstep static batch — every row at
+    the same depth) or a (B,) vector (slot-based continuous batching — every
+    row advances independently; RoPE, the K/V write, and the validity mask
+    are all per-row).
 
     When the cache's S axis is sharded (long-context cells), the f32 softmax
     reductions below are partitioned by GSPMD into per-shard partials plus an
@@ -194,18 +208,24 @@ def apply_decode(spec: AttentionSpec, params, x, cache):
     B, T, _ = x.shape
     assert T == 1
     pos = cache["pos"]
+    per_row = jnp.ndim(pos) == 1
+    pos_b = pos if per_row else jnp.broadcast_to(pos[None], (B,))
     if spec.rope == "mrope":
-        p = jnp.broadcast_to(pos[None, None], (B, 1))
+        p = pos_b[:, None]
         positions = jnp.stack([p, p, p])
     else:
-        positions = jnp.broadcast_to(pos[None, None], (B, 1))
+        positions = pos_b[:, None]
     q, k_new, v_new = _qkv(spec, params, x, positions)
-    k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new.astype(cache["k"].dtype), pos, axis=1)
-    v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new.astype(cache["v"].dtype), pos, axis=1)
+    if per_row:
+        k = _update_rows(cache["k"], k_new.astype(cache["k"].dtype), pos)
+        v = _update_rows(cache["v"], v_new.astype(cache["v"].dtype), pos)
+    else:
+        k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new.astype(cache["k"].dtype), pos, axis=1)
+        v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new.astype(cache["v"].dtype), pos, axis=1)
     S = k.shape[1]
-    kv_valid = jnp.broadcast_to((jnp.arange(S) <= pos)[None], (B, S))
+    kv_valid = jnp.arange(S)[None, :] <= pos_b[:, None]
     o = _attend(q, k.astype(q.dtype), v.astype(q.dtype),
-                jnp.full((1,), pos), kv_valid, causal=False)
+                jnp.zeros((1,), jnp.int32), kv_valid, causal=False)
     y = spec.wo.apply(params["wo"], o.reshape(B, 1, spec.n_heads * spec.head_dim))
     new_cache = {"k": k, "v": v, "pos": pos + 1}
     return y, new_cache

@@ -81,11 +81,17 @@ class MambaSpec:
                              + params["dt_bias"])        # (B,T,di)
         return dt, Bm, Cm
 
-    def apply(self, params, x, state=None):
+    def apply(self, params, x, state=None, valid=None):
         """x: (B,T,D). state (decode): {'conv': (B,dc-1,di), 'h': (B,di,ds)}.
 
         Returns (y, new_state). Full-sequence mode (state=None) starts from
         zeros and also returns the final state (used by prefill).
+
+        ``valid`` (B,T) bool marks real tokens in a right-padded batch
+        (continuous-batching prefill): the recurrent state freezes at padded
+        steps and the conv window is gathered at each row's true length, so
+        the returned state equals an unpadded run's. Outputs at padded
+        positions are garbage and must be ignored by the caller.
         """
         B, T, D = x.shape
         di, ds, dc = self.d_inner, self.d_state, self.d_conv
@@ -97,7 +103,14 @@ class MambaSpec:
         xpad = jnp.concatenate([conv_state, xr], axis=1)  # causal depthwise conv
         xc = sum(xpad[:, i : i + T] * params["conv"][i] for i in range(dc))
         xc = jax.nn.silu(xc + params["conv_b"])
-        new_conv = xpad[:, T:]                             # last dc-1 inputs
+        if valid is None:
+            new_conv = xpad[:, T:]                         # last dc-1 inputs
+        else:
+            # xpad index j holds input position j-(dc-1); the window ending at
+            # each row's last real token lives at indices len .. len+dc-2
+            lengths = valid.sum(1).astype(jnp.int32)       # (B,)
+            idx = lengths[:, None] + jnp.arange(dc - 1)[None, :]
+            new_conv = jnp.take_along_axis(xpad, idx[..., None], axis=1)
 
         dt, Bm, Cm = self._ssm_inputs(params, xc)
         A = -jnp.exp(params["A_log"])                      # (di, ds)
@@ -112,11 +125,20 @@ class MambaSpec:
             y = jnp.einsum("bds,bs->bd", h, c_t)
             return h, y
 
+        def step_masked(h, inp):
+            (xc_t, dt_t, b_t, c_t), v_t = inp[:-1], inp[-1]
+            h_new, y = step(h, (xc_t, dt_t, b_t, c_t))
+            return jnp.where(v_t[:, None, None], h_new, h), y
+
         seq = (jnp.moveaxis(xc, 1, 0).astype(jnp.float32),
                jnp.moveaxis(dt, 1, 0).astype(jnp.float32),
                jnp.moveaxis(Bm, 1, 0).astype(jnp.float32),
                jnp.moveaxis(Cm, 1, 0).astype(jnp.float32))
-        h, ys = jax.lax.scan(step, h0, seq)
+        if valid is None:
+            h, ys = jax.lax.scan(step, h0, seq)
+        else:
+            h, ys = jax.lax.scan(step_masked, h0,
+                                 seq + (jnp.moveaxis(valid, 1, 0),))
         y = jnp.moveaxis(ys, 0, 1).astype(x.dtype)         # (B,T,di)
         y = y + xc * params["D"]
         y = y * jax.nn.silu(z)

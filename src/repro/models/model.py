@@ -308,8 +308,13 @@ class Model:
         return loss
 
     # ------------------------------------------------------------ serve paths
-    def init_caches(self, batch: int, max_len: int, dtype=jnp.bfloat16):
-        """Per-pattern-position stacked decode state (KV caches / SSM states)."""
+    def init_caches(self, batch: int, max_len: int, dtype=None):
+        """Per-pattern-position stacked decode state (KV caches / SSM states).
+
+        ``dtype`` defaults to the config's compute dtype (``cfg.jdtype``) so
+        caches match activations without every call site restating it."""
+        if dtype is None:
+            dtype = self.cfg.jdtype
         caches = []
         for spec in self.block_specs:
             kind = spec["kind"]
@@ -327,6 +332,30 @@ class Model:
                 jax.tree.map(lambda x: x[None], one())
             )
         return caches
+
+    def init_slot_caches(self, n_slots: int, max_len: int, dtype=None):
+        """Slot-major decode caches for the continuous-batching engine
+        (``repro.serve``): identical to :meth:`init_caches` except the
+        attention ``pos`` counter is per-slot, shape (layers, n_slots), so
+        every slot advances at its own depth (see ``apply_decode``)."""
+        caches = self.init_caches(n_slots, max_len, dtype)
+        out = []
+        for spec, c in zip(self.block_specs, caches):
+            if spec["kind"] in ("attn", "attn_moe"):
+                c = dict(c, pos=jnp.zeros((c["pos"].shape[0], n_slots),
+                                          jnp.int32))
+            out.append(c)
+        return out
+
+    def slot_cache_axes(self):
+        """Logical axes matching :meth:`init_slot_caches` (the per-slot axis
+        is the cache "batch" axis, so slot caches shard like batch)."""
+        axes = []
+        for spec, a in zip(self.block_specs, self.cache_axes()):
+            if spec["kind"] in ("attn", "attn_moe"):
+                a = dict(a, pos=("layers", "batch"))
+            axes.append(a)
+        return axes
 
     def cache_axes(self):
         """Logical axes for the stacked caches (kv_seq shardable)."""
@@ -393,12 +422,25 @@ class Model:
         lg = self.unembed.apply(params["unembed"], x[:, 0])
         return lg, new_caches
 
-    def prefill(self, params, inputs, caches):
+    def prefill(self, params, inputs, caches, lengths=None):
         """Process a full prompt, filling caches. Returns (last-token logits,
-        caches). inputs: (B,T) tokens or (B,T,D) embeds."""
+        caches). inputs: (B,T) tokens or (B,T,D) embeds.
+
+        ``lengths`` (B,) enables right-padded prompts with per-row true
+        lengths (continuous-batching admission with bucketed padding): the
+        returned logits are read at each row's last *real* token, recurrent
+        states freeze at padded steps, and the attention cache ``pos``
+        becomes a per-row vector — exactly the state an unpadded prefill of
+        each row would produce. Padding must be on the right; padded K/V
+        entries are written but masked by ``pos`` during decode.
+        """
         cfg = self.cfg
         x = self._embed_inputs(params, inputs)
         B, T = x.shape[:2]
+        valid = None
+        if lengths is not None:
+            lengths = jnp.asarray(lengths, jnp.int32)
+            valid = jnp.arange(T)[None, :] < lengths[:, None]    # (B, T)
         new_caches = []
         for spec, pstack, cstack in zip(self.block_specs, params["blocks"], caches):
             kind = spec["kind"]
@@ -420,17 +462,21 @@ class Model:
                     y = spec["mixer"].wo.apply(p["mixer"]["wo"],
                                                o.reshape(B, T, -1))
                     x = x + y
-                    c2 = {"k": kc, "v": vc, "pos": jnp.asarray(T, jnp.int32)}
+                    c2 = {"k": kc, "v": vc,
+                          "pos": (jnp.asarray(T, jnp.int32) if lengths is None
+                                  else lengths)}
                 elif kind in ("mamba", "mamba_moe"):
-                    y, c2 = spec["mixer"].apply(p["mixer"], h, None)
+                    y, c2 = spec["mixer"].apply(p["mixer"], h, None, valid=valid)
                     x = x + y
                 else:
                     mix = spec["mixer"]
                     st = mix.init_state(B, x.dtype)
-                    y, s_new, x_tm = mix.time_mix(p["mixer"], h, st["S"], st["x_tm"])
+                    y, s_new, x_tm = mix.time_mix(p["mixer"], h, st["S"],
+                                                  st["x_tm"], valid=valid)
                     x = x + y
                     h2 = layers.apply_norm(cfg.norm, p["norm2"], x)
-                    y2, x_cm = mix.channel_mix(p["mixer"], h2, st["x_cm"])
+                    y2, x_cm = mix.channel_mix(p["mixer"], h2, st["x_cm"],
+                                               valid=valid)
                     return x + y2, {"S": s_new, "x_tm": x_tm, "x_cm": x_cm}
                 h2 = layers.apply_norm(cfg.norm, p["norm2"], x)
                 if kind.endswith("_moe"):
@@ -442,7 +488,12 @@ class Model:
             x, c_new = jax.lax.scan(body, x, (pstack, cstack))
             new_caches.append(c_new)
         x = layers.apply_norm(cfg.norm, params["final_norm"], x)
-        lg = self.unembed.apply(params["unembed"], x[:, -1])
+        if lengths is None:
+            x_last = x[:, -1]
+        else:
+            x_last = jnp.take_along_axis(
+                x, (lengths - 1)[:, None, None], axis=1)[:, 0]
+        lg = self.unembed.apply(params["unembed"], x_last)
         return lg, new_caches
 
     # -------------------------------------------------- mask projection

@@ -28,6 +28,15 @@ from repro.core.policy import CompressionPolicy
 from .linear import Linear
 
 
+def _last_valid(x, valid):
+    """x (B,T,D) -> (B,1,D): the last token, or per-row last *real* token
+    when ``valid`` (B,T) marks a right-padded batch."""
+    if valid is None:
+        return x[:, -1:]
+    last = valid.sum(1).astype(jnp.int32) - 1              # (B,)
+    return jnp.take_along_axis(x, last[:, None, None], axis=1)
+
+
 @dataclasses.dataclass(frozen=True)
 class RWKVSpec:
     d_model: int
@@ -114,8 +123,14 @@ class RWKVSpec:
         )).reshape(B, T, H, N)
         return r, k, v, g, w
 
-    def time_mix(self, params, x, state, x_prev):
-        """x: (B,T,D); state: (B,H,N,N); returns (y, new_state, new_x_prev)."""
+    def time_mix(self, params, x, state, x_prev, valid=None):
+        """x: (B,T,D); state: (B,H,N,N); returns (y, new_state, new_x_prev).
+
+        ``valid`` (B,T) bool marks real tokens in a right-padded batch
+        (continuous-batching prefill): S freezes at padded steps and the
+        token-shift carry is gathered at each row's last real token, so the
+        returned state equals an unpadded run's.
+        """
         B, T, D = x.shape
         H, N = self.n_heads, self.head_dim
         r, k, v, g, w = self._branches(params, x, x_prev)
@@ -129,9 +144,18 @@ class RWKVSpec:
             S = w_t[..., :, None].astype(jnp.float32) * S + kv
             return S, y
 
+        def step_masked(S, inp):
+            (r_t, k_t, v_t, w_t), v_mask = inp[:-1], inp[-1]
+            S_new, y = step(S, (r_t, k_t, v_t, w_t))
+            return jnp.where(v_mask[:, None, None, None], S_new, S), y
+
         seq = (jnp.moveaxis(r, 1, 0), jnp.moveaxis(k, 1, 0),
                jnp.moveaxis(v, 1, 0), jnp.moveaxis(w, 1, 0))
-        state, ys = jax.lax.scan(step, state, seq)
+        if valid is None:
+            state, ys = jax.lax.scan(step, state, seq)
+        else:
+            state, ys = jax.lax.scan(step_masked, state,
+                                     seq + (jnp.moveaxis(valid, 1, 0),))
         y = jnp.moveaxis(ys, 0, 1).reshape(B, T, H * N).astype(x.dtype)
         # per-head group norm, then gate and output projection
         y = y.reshape(B, T, H, N)
@@ -139,17 +163,17 @@ class RWKVSpec:
         var = y.var(-1, keepdims=True)
         y = ((y - mu) * jax.lax.rsqrt(var + 1e-5)).reshape(B, T, D)
         y = y * params["ln_x"] * g
-        return self.wo.apply(params["wo"], y), state, x[:, -1:]
+        return self.wo.apply(params["wo"], y), state, _last_valid(x, valid)
 
     # --- channel mix ---------------------------------------------------------
-    def channel_mix(self, params, x, x_prev):
+    def channel_mix(self, params, x, x_prev, valid=None):
         xs = jnp.concatenate([x_prev, x[:, :-1]], axis=1)
         mix = params["mix_c"]
         xk = x * mix[0] + xs * (1 - mix[0])
         xr = x * mix[1] + xs * (1 - mix[1])
         k = jnp.square(jnp.maximum(self.ck.apply(params["ck"], xk), 0))
         r = jax.nn.sigmoid(self.cr.apply(params["cr"], xr))
-        return r * self.cv.apply(params["cv"], k), x[:, -1:]
+        return r * self.cv.apply(params["cv"], k), _last_valid(x, valid)
 
     def init_state(self, batch: int, dtype=jnp.float32):
         return {

@@ -1,0 +1,19 @@
+"""repro.serve — continuous-batching inference engine.
+
+Slot-based serving on top of the model zoo's ``prefill`` / ``decode_step``:
+a fixed-shape decode batch of ``n_slots`` sequences, FCFS admission with
+bucketed prompt padding, per-request sampling/stop, and slot caches that
+shard through ``repro.dist`` logical-axis rules. See ``engine.Engine``.
+"""
+
+from .cache import SlotCache
+from .engine import Engine
+from .metrics import RequestMetrics, ServeMetrics
+from .sampling import SamplingParams, sample
+from .scheduler import Request, RequestState, Scheduler, make_buckets
+
+__all__ = [
+    "Engine", "SlotCache", "ServeMetrics", "RequestMetrics",
+    "SamplingParams", "sample", "Request", "RequestState", "Scheduler",
+    "make_buckets",
+]

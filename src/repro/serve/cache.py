@@ -1,0 +1,89 @@
+"""Slot-based decode-cache manager for the continuous-batching engine.
+
+The engine decodes a fixed batch of ``n_slots`` sequences; each slot owns
+one row of every cache leaf (KV caches, SSM/RWKV states, per-slot attention
+``pos``). Admission prefills a single request (batch 1, bucket-padded) and
+*writes back* its caches into the assigned slot with
+``dynamic_update_slice`` at the leaf's batch axis — one jitted program for
+any slot index, so slot reuse never recompiles.
+
+Sharding: leaves are placed via ``repro.dist`` logical-axis rules
+(``Model.slot_cache_axes()``) when a mesh is active — the KV ``kv_seq``
+axis shards exactly like the static serving path, and the slot axis rides
+the ``batch`` rules.
+"""
+
+from __future__ import annotations
+
+from typing import Any, List
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist import sharding as sh
+
+
+def _batch_axis_tree(model) -> List[Any]:
+    """Per-leaf index of the slot ("batch") axis, shaped like the caches."""
+    return jax.tree.map(
+        lambda names: names.index("batch"),
+        model.slot_cache_axes(),
+        is_leaf=lambda t: isinstance(t, tuple) and all(
+            x is None or isinstance(x, str) for x in t))
+
+
+class SlotCache:
+    """Owns the device-side slot caches and the two jitted maintenance ops
+    (per-slot writeback, per-slot reset)."""
+
+    def __init__(self, model, n_slots: int, max_len: int, dtype=None):
+        self.model = model
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.dtype = dtype
+        caches = model.init_slot_caches(n_slots, max_len, dtype)
+        mesh, rules = sh.current()
+        if mesh is not None and rules is not None:
+            placements = sh.tree_shardings(mesh, rules,
+                                           model.slot_cache_axes(), like=caches)
+            caches = jax.device_put(caches, placements)
+        self.caches = caches
+        self._batch_ix = _batch_axis_tree(model)
+        # jitted lazily: the engine fuses _write_impl into its admission
+        # program, so standalone wrappers are only compiled if actually used
+        self._write = None
+        self._reset = None
+
+    # ----------------------------------------------------------------- ops
+    def _write_impl(self, caches, new, slot):
+        """Write batch-1 prefill caches into row ``slot`` of every leaf."""
+        def upd(big, small, bix):
+            starts = [jnp.zeros((), jnp.int32)] * big.ndim
+            starts[bix] = slot
+            return jax.lax.dynamic_update_slice(
+                big, small.astype(big.dtype), tuple(starts))
+        return jax.tree.map(upd, caches, new, self._batch_ix)
+
+    def _reset_impl(self, caches, slot):
+        """Zero row ``slot`` (hygiene on eviction; admission writeback fully
+        overwrites a slot anyway, so this is optional)."""
+        def upd(big, bix):
+            shape = list(big.shape)
+            shape[bix] = 1
+            starts = [jnp.zeros((), jnp.int32)] * big.ndim
+            starts[bix] = slot
+            return jax.lax.dynamic_update_slice(
+                big, jnp.zeros(shape, big.dtype), tuple(starts))
+        return jax.tree.map(upd, caches, self._batch_ix)
+
+    # ------------------------------------------------------------- interface
+    def write_slot(self, prefill_caches, slot: int) -> None:
+        if self._write is None:
+            self._write = jax.jit(self._write_impl)
+        self.caches = self._write(self.caches, prefill_caches,
+                                  jnp.asarray(slot, jnp.int32))
+
+    def reset_slot(self, slot: int) -> None:
+        if self._reset is None:
+            self._reset = jax.jit(self._reset_impl)
+        self.caches = self._reset(self.caches, jnp.asarray(slot, jnp.int32))

@@ -1,0 +1,195 @@
+"""Continuous-batching inference engine.
+
+The engine serves a stream of variable-length requests through the model's
+``prefill`` / ``decode_step`` with jit-stable shapes:
+
+* the decode batch is always ``n_slots`` rows (free slots carry inert
+  filler — row-independent block families make their garbage harmless);
+* admission prefills one request at a time, bucket-padded (one compile per
+  bucket) with the length-aware ``prefill(lengths=...)``, samples the first
+  token in the same dispatch, then writes the batch-1 caches into the
+  assigned slot (:class:`SlotCache`);
+* each step interleaves: admit waiting requests into free slots, then one
+  batched decode of every live slot with per-slot sampling params and
+  per-request stop conditions (EOS id, max_new_tokens); finished slots are
+  evicted and backfilled from the queue on the next step.
+
+Per-slot sampling state (current token, temperature, top-k, PRNG key,
+generation counter) lives on device and round-trips through the single
+jitted decode call — the steady-state step is one dispatch plus one small
+token transfer for the host-side stop checks.
+
+Exactness contract: for row-independent architectures (everything except
+capacity-constrained MoE routing) greedy output is token-for-token
+identical to a static batched decode of the same prompts — verified in
+``tests/test_serve_engine.py``.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import sampling as sampling_lib
+from .cache import SlotCache
+from .metrics import ServeMetrics
+from .scheduler import Request, RequestState, Scheduler
+
+
+class Engine:
+    """Slot-based continuous-batching engine around one model + params."""
+
+    def __init__(self, model, params, *, n_slots: int = 8, max_len: int = 128,
+                 min_bucket: int = 16, buckets: Optional[Sequence[int]] = None,
+                 dtype=None, metrics: Optional[ServeMetrics] = None):
+        cfg = model.cfg
+        if not cfg.causal:
+            raise ValueError(f"{cfg.name}: encoder-only arch has no decode step")
+        if cfg.frontend != "token":
+            raise ValueError(
+                f"{cfg.name}: the engine serves token frontends only "
+                "(embed-frontend archs have no incremental token stream)")
+        self.model = model
+        self.params = params
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.scheduler = Scheduler(n_slots, max_len, min_bucket=min_bucket,
+                                   buckets=buckets)
+        self.cache = SlotCache(model, n_slots, max_len, dtype)
+        self.metrics = metrics if metrics is not None else ServeMetrics()
+        self.step_count = 0
+
+        # device-side per-slot sampling state (round-trips through _decode)
+        self._dev = {
+            "tokens": jnp.zeros((n_slots,), jnp.int32),
+            "temps": jnp.zeros((n_slots,), jnp.float32),
+            "top_ks": jnp.zeros((n_slots,), jnp.int32),
+            "keys": jnp.zeros((n_slots, 2), jnp.uint32),
+            "counters": jnp.zeros((n_slots,), jnp.int32),
+        }
+        self._live = np.zeros((n_slots,), bool)     # host-side liveness
+
+        self._decode = jax.jit(self._decode_impl)
+        self._admit = jax.jit(self._admit_impl)      # one compile per bucket
+        self._clear_slot = jax.jit(self._clear_slot_impl)
+
+    # ------------------------------------------------------------ jitted ops
+    def _admit_impl(self, params, caches, dev, padded, length, slot, temp,
+                    top_k, key):
+        """One-dispatch admission: bucket-padded batch-1 prefill, first-token
+        sampling, cache writeback into ``slot``, sampling-state update."""
+        pcaches = self.model.init_caches(1, self.max_len, self.cache.dtype)
+        logits, pcaches = self.model.prefill(params, padded, pcaches,
+                                             lengths=length)
+        caches = self.cache._write_impl(caches, pcaches, slot)
+        keys = sampling_lib.fold_keys(key[None], jnp.zeros((1,), jnp.int32))
+        tok = sampling_lib.sample(logits, temp[None], top_k[None], keys)[0]
+        dev = self._set_slot_impl(dev, slot, tok, temp, top_k, key)
+        return tok, caches, dev
+
+    def _decode_impl(self, params, caches, dev):
+        logits, caches = self.model.decode_step(params, dev["tokens"], caches)
+        keys = sampling_lib.fold_keys(dev["keys"], dev["counters"])
+        tokens = sampling_lib.sample(logits, dev["temps"], dev["top_ks"], keys)
+        dev = dict(dev, tokens=tokens, counters=dev["counters"] + 1)
+        return dev, caches
+
+    def _set_slot_impl(self, dev, slot, tok, temp, top_k, key):
+        return {
+            "tokens": dev["tokens"].at[slot].set(tok),
+            "temps": dev["temps"].at[slot].set(temp),
+            "top_ks": dev["top_ks"].at[slot].set(top_k),
+            "keys": dev["keys"].at[slot].set(key),
+            # counter 0 produced the first token during prefill
+            "counters": dev["counters"].at[slot].set(1),
+        }
+
+    def _clear_slot_impl(self, dev, slot):
+        # evicted slots must read as greedy again, or one sampled request
+        # would disable the all-greedy decode fast path for the engine's life
+        return dict(dev, temps=dev["temps"].at[slot].set(0.0),
+                    top_ks=dev["top_ks"].at[slot].set(0))
+
+    # -------------------------------------------------------------- requests
+    def submit(self, req: Request) -> None:
+        # always stamped with the metrics clock: arrival_time is scheduling
+        # metadata for the drive loop (serve_stream rebases the clock onto
+        # the same timeline, so TTFT stays arrival-accurate there)
+        self.scheduler.submit(req)
+        self.metrics.on_submit(req.id, len(req.prompt))
+
+    def has_work(self) -> bool:
+        return self.scheduler.has_work()
+
+    # ------------------------------------------------------------ step logic
+    def _admit_one(self, req: Request, slot: int) -> None:
+        padded, n = self.scheduler.pad_prompt(req)
+        self.metrics.on_admit(req.id)
+        sp = req.sampling
+        tok_dev, self.cache.caches, self._dev = self._admit(
+            self.params, self.cache.caches, self._dev, jnp.asarray(padded),
+            jnp.asarray([n], jnp.int32), jnp.asarray(slot, jnp.int32),
+            jnp.asarray(sp.temperature, jnp.float32),
+            jnp.asarray(sp.top_k, jnp.int32), sampling_lib.base_key(sp.seed))
+        self._live[slot] = True
+        req.state = RequestState.DECODE
+        self._emit(req, int(tok_dev))
+
+    def _emit(self, req: Request, tok: int) -> None:
+        """Record one generated token; finish the request if it stops."""
+        req.generated.append(tok)
+        self.metrics.on_token(req.id)
+        stop = (len(req.generated) >= req.max_new_tokens
+                or (req.eos_id >= 0 and tok == req.eos_id))
+        if stop:
+            slot = req.slot
+            self.scheduler.finish(req)
+            self.metrics.on_done(req.id)
+            if slot is not None:
+                self._live[slot] = False
+                if req.sampling.temperature > 0:
+                    self._dev = self._clear_slot(
+                        self._dev, jnp.asarray(slot, jnp.int32))
+
+    def step(self) -> bool:
+        """One engine iteration: admit into free slots, then one batched
+        decode of all live slots. Returns True if any work was done."""
+        admitted = self.scheduler.admit()
+        for req, slot in admitted:
+            self._admit_one(req, slot)
+        self.step_count += 1
+
+        if not self._live.any():
+            self.metrics.on_step(0, self.n_slots)
+            return bool(admitted)
+
+        self._dev, self.cache.caches = self._decode(
+            self.params, self.cache.caches, self._dev)
+        next_np = np.asarray(self._dev["tokens"])
+
+        self.metrics.on_step(int(self._live.sum()), self.n_slots)
+        for slot in np.nonzero(self._live)[0]:
+            req = self.scheduler.running.get(int(slot))
+            if req is None:
+                continue
+            self._emit(req, int(next_np[slot]))
+        return True
+
+    def run(self, requests: Sequence[Request],
+            max_steps: int = 100_000) -> Dict[int, List[int]]:
+        """Drive a fixed set of already-arrived requests to completion.
+        Returns {request id: generated tokens}. (The streaming loop with
+        wall-clock arrivals lives in ``repro.launch.serve``.)"""
+        for r in requests:
+            self.submit(r)
+        steps = 0
+        while self.has_work():
+            self.step()
+            steps += 1
+            if steps > max_steps:
+                raise RuntimeError("engine failed to drain the queue "
+                                   f"within {max_steps} steps")
+        return {r.id: list(r.generated) for r in requests}

@@ -1,0 +1,100 @@
+"""Serving metrics: per-request TTFT / tok/s and engine-level aggregates.
+
+The engine reports events through :class:`ServeMetrics` with an injectable
+clock (tests pass a fake; production uses ``time.perf_counter``). Nothing
+here touches the device.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+from typing import Callable, Dict, List, Optional
+
+
+@dataclasses.dataclass
+class RequestMetrics:
+    id: int
+    t_submit: float = 0.0
+    t_admit: Optional[float] = None
+    t_first_token: Optional[float] = None
+    t_done: Optional[float] = None
+    n_prompt: int = 0
+    n_generated: int = 0
+
+    @property
+    def ttft(self) -> Optional[float]:
+        if self.t_first_token is None:
+            return None
+        return self.t_first_token - self.t_submit
+
+    @property
+    def decode_tok_s(self) -> Optional[float]:
+        """Per-request decode rate over its residency (first token -> done)."""
+        if self.t_done is None or self.t_first_token is None:
+            return None
+        dt = self.t_done - self.t_first_token
+        return (self.n_generated - 1) / dt if dt > 0 else float("inf")
+
+
+class ServeMetrics:
+    def __init__(self, clock: Callable[[], float] = time.perf_counter):
+        self.clock = clock
+        self.requests: Dict[int, RequestMetrics] = {}
+        self.t_start: Optional[float] = None
+        self.t_last: Optional[float] = None
+        self._occupancy: List[float] = []     # live-slot fraction per step
+
+    # ---------------------------------------------------------------- events
+    def on_submit(self, req_id: int, n_prompt: int,
+                  t: Optional[float] = None) -> None:
+        t = self.clock() if t is None else t
+        if self.t_start is None:
+            self.t_start = t
+        self.requests[req_id] = RequestMetrics(
+            id=req_id, t_submit=t, n_prompt=n_prompt)
+
+    def on_admit(self, req_id: int) -> None:
+        self.requests[req_id].t_admit = self.clock()
+
+    def on_token(self, req_id: int) -> None:
+        m = self.requests[req_id]
+        m.n_generated += 1
+        if m.t_first_token is None:
+            m.t_first_token = self.clock()
+
+    def on_done(self, req_id: int) -> None:
+        t = self.clock()
+        self.requests[req_id].t_done = t
+        self.t_last = t
+
+    def on_step(self, n_live: int, n_slots: int) -> None:
+        self._occupancy.append(n_live / max(n_slots, 1))
+
+    # --------------------------------------------------------------- summary
+    def summary(self) -> Dict[str, float]:
+        done = [m for m in self.requests.values() if m.t_done is not None]
+        ttfts = sorted(m.ttft for m in done if m.ttft is not None)
+        total_tokens = sum(m.n_generated for m in done)
+        elapsed = ((self.t_last - self.t_start)
+                   if done and self.t_start is not None else 0.0)
+
+        def pct(xs, q):
+            if not xs:
+                return 0.0
+            # nearest-rank: ceil(q*n)-1, clamped
+            return xs[max(min(math.ceil(q * len(xs)) - 1, len(xs) - 1), 0)]
+
+        return {
+            "n_requests": len(self.requests),
+            "n_done": len(done),
+            "total_tokens": total_tokens,
+            "elapsed_s": elapsed,
+            "agg_tok_s": total_tokens / elapsed if elapsed > 0 else 0.0,
+            "ttft_mean_s": sum(ttfts) / len(ttfts) if ttfts else 0.0,
+            "ttft_p50_s": pct(ttfts, 0.50),
+            "ttft_p95_s": pct(ttfts, 0.95),
+            "occupancy_mean": (sum(self._occupancy) / len(self._occupancy)
+                               if self._occupancy else 0.0),
+        }

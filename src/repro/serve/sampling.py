@@ -1,0 +1,74 @@
+"""Per-request token sampling for the continuous-batching engine.
+
+One jitted, vmapped kernel handles the whole slot batch with *per-slot*
+parameters: greedy (``temperature == 0``), temperature, and top-k are all
+the same branchless program, so mixed-policy batches cost one dispatch.
+Randomness is the Gumbel-max trick under a vmapped PRNG — every slot draws
+from its own key, derived by folding the request's base key with its
+per-request generation counter (jit-stable shapes, no host RNG state).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """Per-request sampling policy. ``temperature == 0`` means greedy
+    (argmax; ``top_k`` and ``seed`` are then ignored). ``top_k == 0`` means
+    no top-k truncation."""
+    temperature: float = 0.0
+    top_k: int = 0
+    seed: int = 0
+
+
+def _sample_one(logits, temperature, top_k, key):
+    """Sample one token from one row of logits (V,). Branchless: the greedy /
+    top-k / full-softmax variants are selected with ``where`` so the program
+    is vmappable over rows with differing per-request params."""
+    v = logits.shape[-1]
+    logits = logits.astype(jnp.float32)
+    greedy = jnp.argmax(logits).astype(jnp.int32)
+    # top-k threshold: the k-th largest logit (top_k == 0 -> keep everything)
+    sorted_desc = jax.lax.top_k(logits, v)[0]
+    kk = jnp.clip(jnp.where(top_k > 0, top_k, v) - 1, 0, v - 1)
+    thresh = sorted_desc[kk]
+    masked = jnp.where(logits >= thresh, logits, -jnp.inf)
+    # Gumbel-max: argmax(logits/T + g) ~ Categorical(softmax(logits/T))
+    g = jax.random.gumbel(key, (v,), jnp.float32)
+    t = jnp.maximum(temperature, 1e-6)
+    sampled = jnp.argmax(masked / t + g).astype(jnp.int32)
+    return jnp.where(temperature <= 0.0, greedy, sampled)
+
+
+@jax.jit
+def sample(logits, temperatures, top_ks, keys):
+    """logits (B,V), temperatures (B,), top_ks (B,) int32, keys (B,) PRNG
+    keys (uint32 (B,2)) -> tokens (B,) int32.
+
+    All-greedy batches (every temperature 0 — the default serving policy)
+    skip the per-row sort/Gumbel machinery via a runtime ``cond``."""
+    def greedy(_):
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+    def general(_):
+        return jax.vmap(_sample_one)(logits, temperatures, top_ks, keys)
+
+    return jax.lax.cond(jnp.any(temperatures > 0.0), general, greedy, None)
+
+
+@jax.jit
+def fold_keys(base_keys, counters):
+    """Per-slot step keys: fold each request's base key (B,2) with its
+    generation counter (B,) — deterministic per (request seed, token index),
+    independent of slot placement or batch composition."""
+    return jax.vmap(jax.random.fold_in)(base_keys, counters)
+
+
+def base_key(seed: int):
+    """The request's base PRNG key (uint32 (2,))."""
+    return jax.random.PRNGKey(seed)

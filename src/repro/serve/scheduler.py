@@ -1,0 +1,140 @@
+"""Request lifecycle + FCFS admission for the continuous-batching engine.
+
+A :class:`Request` moves WAITING -> PREFILL -> DECODE -> DONE. The
+scheduler owns the waiting queue and the slot free-list; admission is
+strict FCFS into free slots. Prompts are right-padded to a *bucket* length
+(powers of two between ``min_bucket`` and ``max_len``) so the jitted
+prefill compiles once per bucket, not once per prompt length — the
+engine's jit-stable-shapes contract.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import enum
+from typing import Deque, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .sampling import SamplingParams
+
+
+class RequestState(enum.Enum):
+    WAITING = "waiting"
+    PREFILL = "prefill"
+    DECODE = "decode"
+    DONE = "done"
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request. ``eos_id < 0`` disables the EOS stop; the
+    request then runs to ``max_new_tokens`` (which always caps it)."""
+    id: int
+    prompt: np.ndarray                      # (T,) int32 token ids
+    max_new_tokens: int = 16
+    eos_id: int = -1
+    sampling: SamplingParams = dataclasses.field(default_factory=SamplingParams)
+    arrival_time: Optional[float] = None    # None -> stamped at submit time
+
+    # runtime fields owned by the engine
+    state: RequestState = RequestState.WAITING
+    slot: Optional[int] = None
+    generated: List[int] = dataclasses.field(default_factory=list)
+
+    def __post_init__(self):
+        self.prompt = np.asarray(self.prompt, np.int32).reshape(-1)
+        if len(self.prompt) == 0:
+            raise ValueError(f"request {self.id}: empty prompt")
+        if self.max_new_tokens < 1:
+            raise ValueError(f"request {self.id}: max_new_tokens must be >= 1")
+
+
+def make_buckets(min_bucket: int, max_len: int) -> Tuple[int, ...]:
+    """Power-of-two prompt buckets in [min_bucket, max_len]."""
+    buckets = []
+    b = max(int(min_bucket), 1)
+    while b < max_len:
+        buckets.append(b)
+        b *= 2
+    buckets.append(max_len)
+    return tuple(buckets)
+
+
+class Scheduler:
+    """FCFS queue + slot free-list. The engine calls :meth:`admit` once per
+    step; the scheduler never touches device state."""
+
+    def __init__(self, n_slots: int, max_len: int, min_bucket: int = 16,
+                 buckets: Optional[Sequence[int]] = None):
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.buckets = tuple(sorted(buckets)) if buckets else \
+            make_buckets(min_bucket, max_len)
+        self.waiting: Deque[Request] = collections.deque()
+        self.free_slots: List[int] = list(range(n_slots))
+        self.running: dict = {}             # slot -> Request
+
+    # ------------------------------------------------------------- lifecycle
+    def submit(self, req: Request) -> None:
+        budget = len(req.prompt) + req.max_new_tokens
+        if budget > self.max_len:
+            raise ValueError(
+                f"request {req.id}: prompt({len(req.prompt)}) + "
+                f"max_new_tokens({req.max_new_tokens}) > max_len({self.max_len})")
+        if len(req.prompt) > self.buckets[-1]:
+            # reject before a slot is consumed — failing later, mid-admission,
+            # would leak the assigned slot and wedge the engine
+            raise ValueError(
+                f"request {req.id}: prompt({len(req.prompt)}) exceeds the "
+                f"largest prompt bucket ({self.buckets[-1]})")
+        req.state = RequestState.WAITING
+        req.slot = None
+        req.generated = []          # reset runtime fields: resubmit == fresh
+        self.waiting.append(req)
+
+    def bucket_len(self, prompt_len: int) -> int:
+        for b in self.buckets:
+            if b >= prompt_len:
+                return b
+        raise ValueError(f"prompt length {prompt_len} exceeds largest bucket "
+                         f"{self.buckets[-1]}")
+
+    def pad_prompt(self, req: Request) -> Tuple[np.ndarray, int]:
+        """Right-pad the prompt to its bucket. Returns ((1, Tb) tokens,
+        true length). Pad id 0 — padded positions are masked out by the
+        length-aware prefill, the value never matters."""
+        n = len(req.prompt)
+        tb = self.bucket_len(n)
+        padded = np.zeros((1, tb), np.int32)
+        padded[0, :n] = req.prompt
+        return padded, n
+
+    def admit(self) -> List[Tuple[Request, int]]:
+        """FCFS: pop waiting requests into free slots (lowest slot first)."""
+        out = []
+        self.free_slots.sort()
+        while self.waiting and self.free_slots:
+            req = self.waiting.popleft()
+            slot = self.free_slots.pop(0)
+            req.state = RequestState.PREFILL
+            req.slot = slot
+            self.running[slot] = req
+            out.append((req, slot))
+        return out
+
+    def finish(self, req: Request) -> None:
+        req.state = RequestState.DONE
+        if req.slot is not None:
+            self.running.pop(req.slot, None)
+            self.free_slots.append(req.slot)
+            req.slot = None
+
+    # --------------------------------------------------------------- queries
+    @property
+    def n_running(self) -> int:
+        return len(self.running)
+
+    def has_work(self) -> bool:
+        return bool(self.waiting) or bool(self.running)

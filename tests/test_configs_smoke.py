@@ -39,7 +39,7 @@ def test_smoke_decode_step(arch):
     m = build(cfg)
     p = m.init(jax.random.PRNGKey(0))
     B = 2
-    caches = m.init_caches(B, max_len=32, dtype=jnp.float32)
+    caches = m.init_caches(B, max_len=32)
     if cfg.frontend == "token":
         tok = jnp.zeros((B,), jnp.int32)
     else:

@@ -57,7 +57,7 @@ def test_prefill_decode_match_forward(name):
     B, T = 2, 12
     toks = jax.random.randint(jax.random.PRNGKey(1), (B, T), 0, cfg.vocab)
     lg_full = jax.jit(m.logits)(p, toks)
-    caches = m.init_caches(B, max_len=T, dtype=jnp.float32)
+    caches = m.init_caches(B, max_len=T)
     lg, caches = jax.jit(m.prefill)(p, toks[:, :8], caches)
     scale = float(jnp.max(jnp.abs(lg_full))) + 1e-6
     np.testing.assert_allclose(np.asarray(lg), np.asarray(lg_full[:, 7]),
