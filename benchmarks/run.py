@@ -8,6 +8,8 @@ Prints ``name,value,derived`` CSV rows. Sections:
   * speedup_*  — dense vs masked vs packed wall-clock (paper §3.3)
   * bdmm_* / masked_matmul_* — kernel-path microbenches
   * serve,*    — static vs continuous-batching throughput (BENCH_serve.json)
+  * fused,*    — fused vs unfused packed FFN + folded vs masked_dense
+                 serving (BENCH_fused.json)
   * roofline,* — per-cell roofline terms from the dry-run sweep (if present)
 
 ``--fast`` trims step counts for CI-style runs; the full run reproduces the
@@ -26,7 +28,7 @@ def main() -> None:
     ap.add_argument("--skip-roofline", action="store_true")
     ap.add_argument("--sections", default="",
                     help="comma list: table1,fig4,fig5,speedup,kernels,"
-                         "serve,roofline")
+                         "serve,fused,roofline")
     args = ap.parse_args()
     want = set(args.sections.split(",")) if args.sections else None
 
@@ -53,6 +55,9 @@ def main() -> None:
     if on("serve"):
         from benchmarks import serve_bench
         rows += serve_bench.rows(smoke=args.fast)
+    if on("fused"):
+        from benchmarks import fused_bench
+        rows += fused_bench.rows(smoke=args.fast)
     for r in rows:
         print(r)
 

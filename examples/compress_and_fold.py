@@ -1,10 +1,11 @@
 """The paper's full pipeline (Figs 2-3): train with binary masks applied to
-dense weights, then FOLD into the packed block-diagonal inference form and
-verify the two are numerically identical while the packed one holds 1/c of
-the parameters.
+dense weights, then FOLD into the packed block-diagonal inference form via
+the whole-model export pass (`Model.to_packed`) and verify the two are
+numerically identical while the packed one holds 1/c of the parameters.
+With `fuse=True` the Fig-3 permutation-cancellation rewrite additionally
+collapses each FFN onto the one-dispatch fused kernel (masks here are
+trained aligned via `mpd_fuse=True`).
 """
-import dataclasses
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -13,19 +14,17 @@ from repro.data import SyntheticLM
 from repro.models import ModelConfig, build
 from repro.optim import OptConfig
 from repro.train import TrainConfig, run
-from tests.test_models import fold_params  # model-wide Eq.(2) fold
 
 cfg_md = ModelConfig(name="faithful", n_layers=2, d_model=64, n_heads=4,
                      n_kv_heads=2, d_ff=128, vocab=64, mpd_c=4,
-                     mpd_mode="masked_dense", q_chunk=1024)
+                     mpd_mode="masked_dense", mpd_fuse=True, q_chunk=1024)
 model_md = build(cfg_md)
 data = SyntheticLM(vocab=64, seq_len=32, global_batch=16, seed=1)
 out = run(model_md, TrainConfig(opt=OptConfig(lr=3e-3)), data, num_steps=60)
 params_md = out["params"]
 
-cfg_pk = dataclasses.replace(cfg_md, mpd_mode="packed")
-model_pk = build(cfg_pk)
-params_pk = fold_params(model_md, model_pk, params_md)
+model_pk, params_pk = model_md.to_packed(params_md, fuse=True)
+assert model_pk.block_specs[0]["ffn"].fused_packed()  # one-dispatch MLP
 
 toks = jnp.asarray(data.next()["inputs"][:2, :16])
 lg_md = model_md.logits(params_md, toks)

@@ -110,7 +110,10 @@ def _load_manifest(d: str):
 
 
 def restore(ckpt_dir: str, step: int, like: Dict[str, Any]) -> Dict[str, Any]:
-    """Restore into the structure of ``like`` (shapes/dtypes validated)."""
+    """Restore into the structure of ``like`` (shapes/dtypes validated).
+
+    ``like`` leaves may be abstract (``jax.eval_shape`` ShapeDtypeStructs) —
+    only shapes are read, so callers need not materialize a template."""
     d = os.path.join(ckpt_dir, f"step_{step:09d}")
     manifest, data = _load_manifest(d)
     flat, treedef = _flatten_with_paths(like)
@@ -120,8 +123,9 @@ def restore(ckpt_dir: str, step: int, like: Dict[str, Any]) -> Dict[str, Any]:
         arr = data[meta["array"]]
         if zlib.crc32(np.ascontiguousarray(arr).tobytes()) != meta["crc32"]:
             raise IOError(f"checkpoint corruption at leaf {k}")
-        if tuple(arr.shape) != tuple(np.shape(ref)):
-            raise ValueError(f"shape mismatch at {k}: {arr.shape} vs {np.shape(ref)}")
+        ref_shape = tuple(getattr(ref, "shape", None) or np.shape(ref))
+        if tuple(arr.shape) != ref_shape:
+            raise ValueError(f"shape mismatch at {k}: {arr.shape} vs {ref_shape}")
         leaves.append(arr)
     return jax.tree.unflatten(treedef, leaves)
 
@@ -169,3 +173,73 @@ def restore_with_shardings(ckpt_dir: str, step: int, like, shardings=None, *,
 def load_extra(ckpt_dir: str, step: int) -> Dict[str, Any]:
     manifest, _ = _load_manifest(os.path.join(ckpt_dir, f"step_{step:09d}"))
     return manifest.get("extra", {})
+
+
+# --------------------------------------------------------------------------
+# packed export — the compress-then-deploy artifact (paper Eq. 2)
+# --------------------------------------------------------------------------
+
+PACKED_SUBDIR = "packed"
+
+
+def export_packed(ckpt_dir: str, step: int, model, params,
+                  *, fuse: bool = False, blocking: bool = True) -> str:
+    """Fold a trained ``masked_dense`` model and publish the packed params
+    as a deployment checkpoint under ``<ckpt_dir>/packed/``.
+
+    The packed config (and whether the Fig-3 perm-fusion rewrite was
+    applied) rides in the manifest, so :func:`load_packed` can rebuild the
+    serving model from the directory alone. Params hold 1/c of the FC
+    weights — this is the artifact the serve engine deploys.
+    """
+    import dataclasses as _dc
+
+    model_pk, params_pk = model.to_packed(params, fuse=fuse)
+    extra = {
+        "packed_config": _dc.asdict(model_pk.cfg),
+        "perm_fused": bool(fuse),
+        "source_step": int(step),
+    }
+    return save(os.path.join(ckpt_dir, PACKED_SUBDIR), step,
+                {"params": params_pk}, extra=extra, blocking=blocking)
+
+
+def _config_from_dict(d: Dict[str, Any]):
+    """Rebuild a ModelConfig from its JSON round-trip (lists -> tuples)."""
+    from repro.models import ModelConfig
+
+    d = dict(d)
+    for k in ("pattern", "mrope_sections"):
+        d[k] = tuple(d[k])
+    d["mpd_per_kind"] = tuple(tuple(x) for x in d["mpd_per_kind"])
+    return ModelConfig(**d)
+
+
+def load_packed(ckpt_dir: str, step: Optional[int] = None):
+    """Load a packed export written by :func:`export_packed`.
+
+    Returns ``(model, params)`` ready for the serve engine. The model is
+    rebuilt from the stored config; if the export applied the perm-fusion
+    rewrite, the (deterministic) spec surgery is re-derived — stored params
+    already carry any rewritten bias vectors.
+    """
+    from repro.core import export as export_lib
+    from repro.models import build
+
+    d = os.path.join(ckpt_dir, PACKED_SUBDIR)
+    if step is None:
+        step = latest_step(d)
+        if step is None:
+            raise FileNotFoundError(f"no packed export under {d}")
+    extra = load_extra(d, step)
+    model = build(_config_from_dict(extra["packed_config"]))
+    if extra.get("perm_fused"):
+        export_lib.apply_perm_fusion(model)  # spec-only; params pre-rewritten
+    like = jax.eval_shape(lambda k: {"params": model.init(k)},
+                          jax.random.PRNGKey(0))
+    params = restore(d, step, like)["params"]
+    return model, params
+
+
+def has_packed(ckpt_dir: str) -> bool:
+    return latest_step(os.path.join(ckpt_dir, PACKED_SUBDIR)) is not None

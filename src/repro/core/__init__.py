@@ -3,10 +3,10 @@
 from .mask import MaskSpec, block_diag_base, chain_specs, make_mask_spec, mask_dense
 from .mpd import MPDLinearSpec, MODES
 from .policy import CompressionPolicy, uniform, DENSE
-from . import fold, mpd, permute, policy, mask
+from . import export, fold, mpd, permute, policy, mask
 
 __all__ = [
     "MaskSpec", "MPDLinearSpec", "CompressionPolicy", "MODES",
     "block_diag_base", "chain_specs", "make_mask_spec", "mask_dense",
-    "uniform", "DENSE", "fold", "mpd", "permute", "policy", "mask",
+    "uniform", "DENSE", "export", "fold", "mpd", "permute", "policy", "mask",
 ]

@@ -123,29 +123,41 @@ def to_packed(spec: MPDLinearSpec, params: Params) -> Params:
     return out
 
 
-def apply(spec: MPDLinearSpec, params: Params, x, *, precision=None):
-    """Forward pass ``y = x @ W_eff (+ b)`` for any mode.
+def apply(spec: MPDLinearSpec, params: Params, x, *,
+          activation: Optional[str] = None, extra_bias=None, precision=None):
+    """Forward pass ``y = act(x @ W_eff + b)`` for any mode.
 
-    ``x``: ``(..., d_in)`` -> ``(..., d_out)``.
+    ``x``: ``(..., d_in)`` -> ``(..., d_out)``. The bias and ``activation``
+    (an entry of :data:`repro.kernels.ref.ACTIVATIONS`) are pushed *into*
+    the kernel call as a fused epilogue on the compressed modes — one
+    dispatch on the Pallas routes — instead of composing as separate XLA
+    ops around it. ``extra_bias`` lets callers fold an additional additive
+    term into the same epilogue (e.g. Mamba's ``dt_bias``); it combines
+    with the layer's own bias when both exist. On the packed mode the bias
+    is re-indexed into packed order (epilogues run pre-unpack; elementwise
+    activations commute with the output permutation).
     """
-    from repro.kernels import ops  # late import: kernels are optional at import time
+    from repro.kernels import ops, ref  # late import: kernels optional at import time
 
+    b = params["b"] if spec.use_bias else None
+    if extra_bias is not None:
+        b = extra_bias if b is None else b + extra_bias
     if spec.mask is None or spec.mode == "dense":
         y = jnp.dot(x, params["w"], precision=precision)
+        if b is not None:
+            y = y + b
+        y = ref.ACTIVATIONS[activation](y)  # plain dense: XLA fuses this
     elif spec.mode == "masked_dense":
         mask = jnp.asarray(mask_dense(spec.mask, np.float32), params["w"].dtype)
-        y = ops.masked_matmul(x, params["w"], mask, precision=precision)
+        y = ops.masked_matmul(x, params["w"], mask, b, activation=activation,
+                              precision=precision)
     else:  # packed
         m = spec.mask
         xp = fold_lib.pack_inputs(m, x, skip=spec.skip_in_perm)
-        yp = ops.bdmm(xp, params["w"], precision=precision)
+        bp = None if b is None else permute.apply(permute.invert(m.out_perm), b)
+        yp = ops.bdmm(xp, params["w"], bp, activation=activation,
+                      precision=precision)
         y = fold_lib.unpack_outputs(m, yp, skip=spec.skip_out_perm)
-    if spec.use_bias:
-        b = params["b"]
-        if spec.compressed and spec.mode == "packed" and spec.skip_out_perm:
-            # outputs are left in packed order; bias must be packed the same way
-            b = permute.apply(permute.invert(spec.mask.out_perm), b)
-        y = y + b
     return y
 
 

@@ -2,8 +2,12 @@
 
 - ``bdmm``          : block-diagonal matmul (packed inference/training form)
 - ``masked_matmul`` : fused mask∘W matmul (paper-faithful training, Fig 2)
+- ``fused_ffn``     : block-diagonal fused MLP (perm-fused packed FFN path)
 - ``ops``           : jit'd differentiable wrappers + backend routing
 - ``ref``           : pure-jnp oracles
+
+Bias/activation epilogues execute inside every kernel; ``ops`` carries the
+custom VJPs over the fused forms.
 """
 
 from jax.experimental.pallas import tpu as _pltpu

@@ -1,0 +1,178 @@
+"""Pallas TPU kernel: block-diagonal fused MLP (packed + perm-fused FFN).
+
+For a perm-fused packed FFN (paper Fig 3: inner permutations cancelled, the
+hidden activation stays in block order) the three projections share one
+block structure — block ``n`` of the MLP is completely independent:
+
+    u_n = x_n @ Wu[n] + bu_n                       (bi -> f slice of d_ff)
+    h_n = act(x_n @ Wg[n] + bg_n) * u_n            (gated; or act(u_n))
+    y_n = h_n @ Wd[n] + bd_n                       (f -> bo)
+
+Executed as separate ``bdmm`` calls this is 3 matmul dispatches plus 2
+elementwise passes, with the ``(tokens, d_ff)`` hidden written to and read
+back from HBM twice. Here one grid step computes the whole pipeline for one
+``(m_tile, block, f_tile)`` cell with the hidden slice held in VMEM: a
+single dispatch, and the hidden never touches HBM.
+
+TPU mapping
+-----------
+Grid ``(m_tiles, nb, f_tiles)`` with the f (hidden) axis innermost
+("arbitrary" semantics) accumulating the down-projection into a f32 VMEM
+scratch tile; up/gate biases index per f-tile, the down bias + store run on
+the last f step. Working set per step (bm=128, bf=512, bi=bo=256, f32):
+
+    x (bm·bi) + Wu,Wg (bi·bf ×2) + Wd (bf·bo) + h (bm·bf) + acc (bm·bo)
+    ≈ 128KB + 512KB×3 + 256KB + 128KB ≈ 2 MB
+
+— comfortably inside ~16 MB VMEM with double-buffering headroom.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from . import tpu_compiler_params
+from .ref import ACTIVATIONS
+
+
+def _pick_tile(dim: int, want: int) -> int:
+    t = min(want, dim)
+    if dim % t:  # grid must tile exactly; fall back on awkward remainders
+        t = next(s for s in range(t, 0, -1) if dim % s == 0)
+    return t
+
+
+def _ffn_kernel(*refs, n_f: int, activation, out_dtype, gated: bool,
+                has_b_up: bool, has_b_gate: bool, has_b_down: bool):
+    """One (bm, block, bf) cell: hidden slice in VMEM, fused epilogues."""
+    it = iter(refs)
+    x_ref = next(it)
+    wu_ref = next(it)
+    wg_ref = next(it) if gated else None
+    wd_ref = next(it)
+    bu_ref = next(it) if has_b_up else None
+    bg_ref = next(it) if has_b_gate else None
+    bd_ref = next(it) if has_b_down else None
+    o_ref = next(it)
+    acc_ref = next(it)
+    fi = pl.program_id(2)
+
+    @pl.when(fi == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[:, 0, :]  # (bm, bi)
+    u = jax.lax.dot_general(x, wu_ref[0], (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    if bu_ref is not None:
+        u = u + bu_ref[0].astype(jnp.float32)
+    if gated:
+        g = jax.lax.dot_general(x, wg_ref[0], (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        if bg_ref is not None:
+            g = g + bg_ref[0].astype(jnp.float32)
+        h = ACTIVATIONS[activation](g) * u
+    else:
+        h = ACTIVATIONS[activation](u)
+
+    acc_ref[...] += jax.lax.dot_general(
+        h, wd_ref[0].astype(jnp.float32), (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(fi == n_f - 1)
+    def _epilogue():
+        out = acc_ref[...]
+        if bd_ref is not None:
+            out = out + bd_ref[0].astype(jnp.float32)
+        o_ref[...] = out.astype(out_dtype)[:, None, :]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("activation", "bm", "bf", "interpret", "out_dtype"),
+)
+def fused_ffn(
+    x: jax.Array,
+    w_up: jax.Array,
+    w_down: jax.Array,
+    w_gate: Optional[jax.Array] = None,
+    b_up: Optional[jax.Array] = None,
+    b_gate: Optional[jax.Array] = None,
+    b_down: Optional[jax.Array] = None,
+    *,
+    activation: Optional[str] = "silu",
+    bm: int = 128,
+    bf: int = 512,
+    interpret: bool = False,
+    out_dtype=None,
+) -> jax.Array:
+    """Fused block-diagonal MLP ``(..., nb*bi) -> (..., nb*bo)``.
+
+    ``w_up/w_gate: (nb, bi, f)``; ``w_down: (nb, f, bo)``; biases packed
+    (``(nb*f,)`` up/gate, ``(nb*bo,)`` down). Gated when ``w_gate`` is given
+    (``h = act(gate) * up``), plain ``h = act(up)`` otherwise. Tile sizes
+    clamp to the actual dims, so smoke shapes work unchanged.
+    """
+    nb, bi, f = w_up.shape
+    nb_d, f_d, bo = w_down.shape
+    assert (nb_d, f_d) == (nb, f), (w_up.shape, w_down.shape)
+    lead = x.shape[:-1]
+    assert x.shape[-1] == nb * bi, (x.shape, w_up.shape)
+    m = 1
+    for d in lead:
+        m *= d
+    x2 = x.reshape(m, nb, bi)
+
+    bm_, bf_ = _pick_tile(m, bm), _pick_tile(f, bf)
+    n_f = f // bf_
+    grid = (m // bm_, nb, n_f)
+    out_dtype = out_dtype or x.dtype
+    gated_ = w_gate is not None
+
+    kernel = functools.partial(
+        _ffn_kernel, n_f=n_f, activation=activation, out_dtype=out_dtype,
+        gated=gated_, has_b_up=b_up is not None, has_b_gate=b_gate is not None,
+        has_b_down=b_down is not None,
+    )
+
+    in_specs = [
+        pl.BlockSpec((bm_, 1, bi), lambda i, n, fi: (i, n, 0)),
+        pl.BlockSpec((1, bi, bf_), lambda i, n, fi: (n, 0, fi)),
+    ]
+    args = [x2, w_up]
+    if gated_:
+        assert w_gate.shape == w_up.shape, (w_gate.shape, w_up.shape)
+        in_specs.append(pl.BlockSpec((1, bi, bf_), lambda i, n, fi: (n, 0, fi)))
+        args.append(w_gate)
+    in_specs.append(pl.BlockSpec((1, bf_, bo), lambda i, n, fi: (n, fi, 0)))
+    args.append(w_down)
+    for b, width in ((b_up, f), (b_gate, f)):
+        if b is not None:
+            assert b.shape == (nb * f,), (b.shape, nb, f)
+            in_specs.append(pl.BlockSpec((1, bf_), lambda i, n, fi: (n, fi)))
+            args.append(b.reshape(nb, width))
+    if b_down is not None:
+        assert b_down.shape == (nb * bo,), (b_down.shape, nb, bo)
+        in_specs.append(pl.BlockSpec((1, bo), lambda i, n, fi: (n, 0)))
+        args.append(b_down.reshape(nb, bo))
+
+    y = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((bm_, 1, bo), lambda i, n, fi: (i, n, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, nb, bo), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm_, bo), jnp.float32)],
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(*args)
+    return y.reshape(*lead, nb * bo)

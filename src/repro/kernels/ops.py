@@ -6,12 +6,29 @@ Routing policy (override with ``repro.kernels.ops.set_backend``):
 * ``"interpret"`` — Pallas interpret mode (CPU correctness checks; slow).
 * ``"jnp"``     — pure-jnp reference path (fast on CPU). Default off-TPU.
 
-The custom VJPs wrap the *raw* matmuls so that (a) gradients flow through the
-fused kernels rather than XLA's transpose of the reference and (b) the
-masked-dense training invariant (off-mask grads are exact zeros) holds by
-construction. Bias/activation compose outside — XLA fuses those elementwise
-epilogues on its own; serving paths that want the Pallas-fused epilogue call
-:func:`repro.kernels.bdmm.bdmm` directly (it is not differentiated).
+Every entry point is *fused and differentiable*: ``bias`` and ``activation``
+execute inside the kernel epilogue (Pallas routes) or inside the jnp
+reference (where XLA fuses them), and the custom VJPs extend to the fused
+forms. Outside differentiation (serving) the primal runs as ONE fused
+dispatch. Under ``grad``, the bdmm/masked_matmul fwd rules instead emit the
+pre-activation ``z`` (kernel dispatch + an elementwise activation) and save
+it as a residual, so the backward composes the activation gradient with the
+upstream cotangent and reuses the existing bdmm/SDDMM transposes without
+re-running the matmul — ``masked_matmul``'s forward is full dense FLOPs, a
+recompute there would cost a fourth matmul per step. ``fused_ffn``'s
+backward does recompute its pre-activations: those are block-local bdmms at
+1/c cost, cheaper than carrying two ``(tokens, d_ff)`` residuals. Training
+and serving therefore share one fused path; nothing calls the raw kernels
+directly anymore.
+
+All three backends honor ``bias``/``activation`` identically. ``precision``
+only selects the einsum/dot precision on the ``jnp`` route; the Pallas
+kernels always accumulate in float32 via ``preferred_element_type``
+(equivalent to HIGHEST), so it is intentionally — and now explicitly — a
+no-op there.
+
+The masked-dense training invariant (off-mask grads are exact zeros) holds
+by construction on every route.
 """
 
 from __future__ import annotations
@@ -23,6 +40,7 @@ import jax
 import jax.numpy as jnp
 
 from . import bdmm as bdmm_kernel
+from . import fused_ffn as ffn_kernel
 from . import masked_matmul as mm_kernel
 from . import ref
 
@@ -39,66 +57,105 @@ def get_backend() -> str:
     return _BACKEND
 
 
+def _act_bwd(activation: Optional[str], z, g):
+    """Compose the upstream cotangent with the activation gradient at the
+    (recomputed) pre-activation ``z`` — via jax.vjp of the registry entry, so
+    the backward can never drift from the forward's definition."""
+    if activation is None:
+        return g
+    _, vjp = jax.vjp(ref.ACTIVATIONS[activation], z)
+    return vjp(g)[0]
+
+
 # --------------------------------------------------------------------------
 # bdmm — block-diagonal matmul (packed inference/training form)
 # --------------------------------------------------------------------------
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
-def _bdmm(x, wp, precision):
+def _bdmm_raw(x, wp, bias, activation, precision):
+    """Backend-routed fused forward (no custom VJP — used by fwd and bwd)."""
     if _BACKEND == "jnp":
-        return ref.bdmm_ref(x, wp, precision=precision)
-    return bdmm_kernel.bdmm(x, wp, interpret=(_BACKEND == "interpret"))
+        return ref.bdmm_ref(x, wp, bias, activation=activation,
+                            precision=precision)
+    return bdmm_kernel.bdmm(x, wp, bias, activation=activation,
+                            interpret=(_BACKEND == "interpret"))
 
 
-def _bdmm_fwd(x, wp, precision):
-    return _bdmm(x, wp, precision), (x, wp)
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def _bdmm(x, wp, bias, activation, precision):
+    return _bdmm_raw(x, wp, bias, activation, precision)
 
 
-def _bdmm_bwd(precision, res, g):
-    x, wp = res
+def _bdmm_fwd(x, wp, bias, activation, precision):
+    if activation is None:
+        return _bdmm(x, wp, bias, None, precision), (x, wp, bias, None)
+    # under grad: emit pre-activation z and save it, so bwd needs no recompute
+    z = _bdmm_raw(x, wp, bias, None, precision)
+    return ref.ACTIVATIONS[activation](z), (x, wp, bias, z)
+
+
+def _bdmm_bwd(activation, precision, res, g):
+    x, wp, bias, z = res
     nb, bi, bo = wp.shape
     lead = x.shape[:-1]
+    if activation is not None:
+        g = _act_bwd(activation, z, g)
     # dx[:, n, :] = g[:, n, :] @ wp[n]^T    (another bdmm with transposed blocks)
-    dx = _bdmm(g, jnp.swapaxes(wp, 1, 2), precision).reshape(*lead, nb * bi)
+    dx = _bdmm_raw(g, jnp.swapaxes(wp, 1, 2), None, None,
+                   precision).reshape(*lead, nb * bi)
     # dwp[n] = x[:, n, :]^T @ g[:, n, :]    (per-block SDDMM-free dense grad)
     xb = x.reshape(-1, nb, bi)
     gb = g.reshape(-1, nb, bo)
     dwp = jnp.einsum("tnk,tno->nko", xb, gb, precision=precision).astype(wp.dtype)
-    return dx, dwp
+    db = None if bias is None else g.reshape(-1, nb * bo).sum(0).astype(bias.dtype)
+    return dx, dwp, db
 
 
 _bdmm.defvjp(_bdmm_fwd, _bdmm_bwd)
 
 
 def bdmm(x, wp, bias=None, *, activation: Optional[str] = None, precision=None):
-    """Differentiable block-diagonal matmul ``(..., nb*bi) -> (..., nb*bo)``.
+    """Differentiable fused block-diagonal matmul
+    ``(..., nb*bi) -> act(x @ blockdiag(wp) + bias)`` with packed outputs
+    ``(..., nb*bo)``.
 
-    ``bias`` is packed ``(nb*bo,)``; activation is fused by XLA (or by the
-    Pallas epilogue on the non-differentiated serving path).
+    ``bias`` is packed ``(nb*bo,)``; ``activation`` names an entry of
+    :data:`repro.kernels.ref.ACTIVATIONS`. Both run inside the kernel
+    epilogue on the Pallas routes and fuse under XLA on the jnp route.
     """
-    y = _bdmm(x, wp, precision)
-    if bias is not None:
-        y = y + bias
-    return ref.ACTIVATIONS[activation](y)
+    return _bdmm(x, wp, bias, activation, precision)
 
 
 # --------------------------------------------------------------------------
 # masked matmul — paper-faithful training op
 # --------------------------------------------------------------------------
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
-def _masked_matmul(x, w, mask, precision):
+def _masked_matmul_raw(x, w, mask, bias, activation, precision):
     if _BACKEND == "jnp":
-        return ref.masked_matmul_ref(x, w, mask, precision=precision)
-    return mm_kernel.masked_matmul(x, w, mask, interpret=(_BACKEND == "interpret"))
+        return ref.masked_matmul_ref(x, w, mask, bias, activation=activation,
+                                     precision=precision)
+    return mm_kernel.masked_matmul(x, w, mask, bias, activation=activation,
+                                   interpret=(_BACKEND == "interpret"))
 
 
-def _masked_matmul_fwd(x, w, mask, precision):
-    return _masked_matmul(x, w, mask, precision), (x, w, mask)
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5))
+def _masked_matmul(x, w, mask, bias, activation, precision):
+    return _masked_matmul_raw(x, w, mask, bias, activation, precision)
 
 
-def _masked_matmul_bwd(precision, res, g):
-    x, w, mask = res
+def _masked_matmul_fwd(x, w, mask, bias, activation, precision):
+    if activation is None:
+        return (_masked_matmul(x, w, mask, bias, None, precision),
+                (x, w, mask, bias, None))
+    # under grad: save the pre-activation — recomputing it in bwd would be a
+    # fourth full-dense matmul on the masked_dense training hot path
+    z = _masked_matmul_raw(x, w, mask, bias, None, precision)
+    return ref.ACTIVATIONS[activation](z), (x, w, mask, bias, z)
+
+
+def _masked_matmul_bwd(activation, precision, res, g):
+    x, w, mask, bias, z = res
+    if activation is not None:
+        g = _act_bwd(activation, z, g)
     if _BACKEND == "jnp":
         dx = jnp.dot(g, (w * mask.astype(w.dtype)).T, precision=precision)
         dw = ref.matmul_masked_grad_ref(
@@ -107,9 +164,12 @@ def _masked_matmul_bwd(precision, res, g):
         ).astype(w.dtype)
     else:
         interp = _BACKEND == "interpret"
-        dx = mm_kernel.masked_matmul(g, w, mask, transpose_rhs=True, interpret=interp)
+        dx = mm_kernel.masked_matmul(g, w, mask, transpose_rhs=True,
+                                     interpret=interp)
         dw = mm_kernel.sddmm_masked(x, g, mask, interpret=interp).astype(w.dtype)
-    return dx, dw, jnp.zeros_like(mask)
+    db = (None if bias is None
+          else g.reshape(-1, g.shape[-1]).sum(0).astype(bias.dtype))
+    return dx, dw, jnp.zeros_like(mask), db
 
 
 _masked_matmul.defvjp(_masked_matmul_fwd, _masked_matmul_bwd)
@@ -117,8 +177,106 @@ _masked_matmul.defvjp(_masked_matmul_fwd, _masked_matmul_bwd)
 
 def masked_matmul(x, w, mask, bias=None, *, activation: Optional[str] = None,
                   precision=None):
-    """Differentiable ``y = act(x @ (mask ∘ w) + b)`` with masked gradients."""
-    y = _masked_matmul(x, w, jax.lax.stop_gradient(mask), precision)
-    if bias is not None:
-        y = y + bias
-    return ref.ACTIVATIONS[activation](y)
+    """Differentiable ``y = act(x @ (mask ∘ w) + b)`` with masked gradients
+    and the bias/activation epilogue fused into the kernel."""
+    return _masked_matmul(x, w, jax.lax.stop_gradient(mask), bias, activation,
+                          precision)
+
+
+# --------------------------------------------------------------------------
+# fused block-diagonal MLP — the packed+perm-fused FFN hot path
+# --------------------------------------------------------------------------
+
+def _fused_ffn_raw(x, w_up, w_gate, w_down, b_up, b_gate, b_down, activation,
+                   precision):
+    if _BACKEND == "jnp":
+        return ref.fused_ffn_ref(x, w_up, w_down, w_gate=w_gate, b_up=b_up,
+                                 b_gate=b_gate, b_down=b_down,
+                                 activation=activation, precision=precision)
+    return ffn_kernel.fused_ffn(x, w_up, w_down, w_gate=w_gate, b_up=b_up,
+                                b_gate=b_gate, b_down=b_down,
+                                activation=activation,
+                                interpret=(_BACKEND == "interpret"))
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(7, 8))
+def _fused_ffn(x, w_up, w_gate, w_down, b_up, b_gate, b_down, activation,
+               precision):
+    return _fused_ffn_raw(x, w_up, w_gate, w_down, b_up, b_gate, b_down,
+                          activation, precision)
+
+
+def _fused_ffn_fwd(x, w_up, w_gate, w_down, b_up, b_gate, b_down, activation,
+                   precision):
+    y = _fused_ffn(x, w_up, w_gate, w_down, b_up, b_gate, b_down, activation,
+                   precision)
+    return y, (x, w_up, w_gate, w_down, b_up, b_gate, b_down)
+
+
+def _fused_ffn_bwd(activation, precision, res, g):
+    """Backward decomposes into the bdmm transposes: recompute the (cheap,
+    block-local) pre-activations, vjp through the elementwise hidden
+    epilogue, then standard per-block matmul gradients."""
+    x, w_up, w_gate, w_down, b_up, b_gate, b_down = res
+    nb, bi, f = w_up.shape
+    bo = w_down.shape[2]
+    lead = x.shape[:-1]
+
+    z_u = _bdmm_raw(x, w_up, b_up, None, precision)
+    if w_gate is not None:
+        z_g = _bdmm_raw(x, w_gate, b_gate, None, precision)
+        h, epi_vjp = jax.vjp(ref.gated(activation), z_g, z_u)
+    else:
+        z_g = None
+        h, epi_vjp = jax.vjp(ref.ACTIVATIONS[activation], z_u)
+
+    # down projection grads
+    dh = _bdmm_raw(g, jnp.swapaxes(w_down, 1, 2), None, None, precision)
+    hb = h.reshape(-1, nb, f)
+    gb = g.reshape(-1, nb, bo)
+    dw_down = jnp.einsum("tnk,tno->nko", hb, gb,
+                         precision=precision).astype(w_down.dtype)
+    db_down = (None if b_down is None
+               else g.reshape(-1, nb * bo).sum(0).astype(b_down.dtype))
+
+    # hidden epilogue grads -> up/gate pre-activation cotangents
+    if w_gate is not None:
+        dz_g, dz_u = epi_vjp(dh)
+    else:
+        (dz_u,) = epi_vjp(dh)
+        dz_g = None
+
+    def proj_bwd(dz, w, b):
+        dx = _bdmm_raw(dz, jnp.swapaxes(w, 1, 2), None, None, precision)
+        dzb = dz.reshape(-1, nb, f)
+        xb = x.reshape(-1, nb, bi)
+        dw = jnp.einsum("tnk,tno->nko", xb, dzb,
+                        precision=precision).astype(w.dtype)
+        db = None if b is None else dz.reshape(-1, nb * f).sum(0).astype(b.dtype)
+        return dx, dw, db
+
+    dx, dw_up, db_up = proj_bwd(dz_u, w_up, b_up)
+    if w_gate is not None:
+        dx_g, dw_gate, db_gate = proj_bwd(dz_g, w_gate, b_gate)
+        dx = dx + dx_g
+    else:
+        dw_gate = db_gate = None
+    return (dx.reshape(*lead, nb * bi), dw_up, dw_gate, dw_down, db_up,
+            db_gate, db_down)
+
+
+_fused_ffn.defvjp(_fused_ffn_fwd, _fused_ffn_bwd)
+
+
+def fused_ffn(x, w_up, w_down, *, w_gate=None, b_up=None, b_gate=None,
+              b_down=None, activation: Optional[str] = "silu", precision=None):
+    """Differentiable fused block-diagonal MLP (one dispatch on the Pallas
+    routes): ``y = (act(x@Wg+bg) * (x@Wu+bu)) @ Wd + bd`` when gated, else
+    ``y = act(x@Wu+bu) @ Wd + bd``.
+
+    Shapes: ``x (..., nb*bi)``; ``w_up/w_gate (nb, bi, f)``;
+    ``w_down (nb, f, bo)``; biases packed. The ``(tokens, nb*f)`` hidden
+    lives only in VMEM on the Pallas routes.
+    """
+    return _fused_ffn(x, w_up, w_gate, w_down, b_up, b_gate, b_down,
+                      activation, precision)

@@ -3,20 +3,41 @@
 These are the correctness references the Pallas kernels are tested against
 (interpret mode on CPU, real lowering on TPU), and also the fast CPU
 execution path used by the examples/benchmarks in this container.
+
+``ACTIVATIONS`` is the single registry both the fused kernel epilogues and
+the unfused model graph draw from — every entry delegates to the same
+``jax.nn`` function the model code used to call directly, so fusing an
+epilogue into a kernel is bit-consistent with computing it as a separate
+XLA op (the old hand-rolled tanh-gelu constant drifted from
+``jax.nn.gelu``; see tests/test_export_fused.py).
 """
 
 from __future__ import annotations
 
 from typing import Optional
 
+import jax
 import jax.numpy as jnp
 
 ACTIVATIONS = {
     None: lambda x: x,
     "relu": lambda x: jnp.maximum(x, 0),
-    "gelu": lambda x: 0.5 * x * (1 + jnp.tanh(0.7978845608028654 * (x + 0.044715 * x**3))),
-    "silu": lambda x: x * (1 / (1 + jnp.exp(-x))),
+    # tanh approximation — matches what models/ffn.py computes unfused
+    # (jax.nn.gelu defaults to approximate=True)
+    "gelu": lambda x: jax.nn.gelu(x, approximate=True),
+    "silu": jax.nn.silu,
+    "sigmoid": jax.nn.sigmoid,
+    "softplus": jax.nn.softplus,
+    # RWKV channel-mix: squared ReLU
+    "sqrelu": lambda x: jnp.square(jnp.maximum(x, 0)),
 }
+
+
+def gated(activation: Optional[str]):
+    """The two-operand gated epilogue ``act(gate) * up`` used by fused MLPs
+    (``activation="silu"`` is SwiGLU). Returns a callable ``(gate, up) -> h``."""
+    act = ACTIVATIONS[activation]
+    return lambda g, u: act(g) * u
 
 
 def bdmm_ref(x, wp, bias=None, activation: Optional[str] = None, precision=None):
@@ -55,3 +76,23 @@ def matmul_masked_grad_ref(x, g, mask, precision=None):
     """Oracle for the weight-gradient of the masked matmul:
     ``dW = (x^T @ g) ∘ mask`` (an SDDMM — output sampled by the mask)."""
     return jnp.einsum("...i,...o->io", x, g, precision=precision) * mask
+
+
+def fused_ffn_ref(x, w_up, w_down, w_gate=None, b_up=None, b_gate=None,
+                  b_down=None, activation: Optional[str] = "silu",
+                  precision=None):
+    """Block-diagonal fused-MLP oracle (perm-fused packed FFN, hidden never
+    leaves block order).
+
+    ``x: (..., nb*bi)``; ``w_up/w_gate: (nb, bi, f)``; ``w_down: (nb, f, bo)``;
+    biases packed (``(nb*f,)`` / ``(nb*bo,)``). Gated (SwiGLU-family) when
+    ``w_gate`` is given: ``h = act(x@Wg + bg) * (x@Wu + bu)``; otherwise
+    ``h = act(x@Wu + bu)``. Returns ``act_down-free`` ``h @ Wd + bd``.
+    """
+    u = bdmm_ref(x, w_up, b_up, precision=precision)
+    if w_gate is not None:
+        g = bdmm_ref(x, w_gate, b_gate, precision=precision)
+        h = gated(activation)(g, u)
+    else:
+        h = ACTIVATIONS[activation](u)
+    return bdmm_ref(h, w_down, b_down, precision=precision)

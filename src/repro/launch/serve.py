@@ -127,6 +127,59 @@ def _continuous_main(args, cfg, model, params):
           f"slot occupancy {summary['occupancy_mean']*100:.0f}%")
 
 
+def _restore_latest(ckpt_dir, params, tag=""):
+    """Restore ``params`` from the newest train checkpoint in ``ckpt_dir``."""
+    from repro.checkpoint import checkpoint as ckpt_lib
+
+    step = ckpt_lib.latest_step(ckpt_dir)
+    if step is None:
+        raise SystemExit(f"no checkpoint under {ckpt_dir}")
+    params = ckpt_lib.restore(ckpt_dir, step, {"params": params})["params"]
+    print(f"restored {tag}step {step} from {ckpt_dir}")
+    return params
+
+
+def _load_model(args):
+    """Resolve (model, params) from the CLI: a packed export directory, a
+    masked_dense train checkpoint folded on the fly, or random init."""
+    from repro.checkpoint import checkpoint as ckpt_lib
+
+    over = {}
+    if args.mpd_c:
+        over["mpd_c"] = args.mpd_c
+    if args.mpd_fuse:
+        over["mpd_fuse"] = True
+    cfg = get_config(args.arch, smoke=args.smoke, **over)
+
+    if args.ckpt_dir and ckpt_lib.has_packed(args.ckpt_dir):
+        # deployment artifact written by `train --fold-to-packed` /
+        # export_packed: config + fold + perm-fusion all recorded inside
+        if over or args.fold_to_packed:
+            print("note: packed export found — its recorded config wins; "
+                  "ignoring --mpd-c/--mpd-fuse/--fold-to-packed")
+        model, params = ckpt_lib.load_packed(args.ckpt_dir)
+        print(f"loaded packed export from {args.ckpt_dir}/packed")
+        return model.cfg, model, params
+
+    if args.fold_to_packed:
+        import dataclasses
+        cfg_md = dataclasses.replace(cfg, mpd_mode="masked_dense")
+        model_md = build(cfg_md)
+        params = model_md.init(jax.random.PRNGKey(0))
+        if args.ckpt_dir:
+            params = _restore_latest(args.ckpt_dir, params, "masked_dense ")
+        model, params = model_md.to_packed(params, fuse=cfg.mpd_fuse)
+        print(f"folded to packed: {model.param_count():,} params "
+              f"(was {model_md.param_count():,})")
+        return model.cfg, model, params
+
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    if args.ckpt_dir:
+        params = _restore_latest(args.ckpt_dir, params)
+    return cfg, model, params
+
+
 def main(argv=None):
     p = argparse.ArgumentParser()
     p.add_argument("--arch", choices=ARCHS, required=True)
@@ -143,14 +196,23 @@ def main(argv=None):
     p.add_argument("--slots", type=int, default=4,
                    help="continuous-mode decode slots")
     p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--mpd-c", type=int, default=0, help="0 = config default")
+    p.add_argument("--mpd-fuse", action="store_true",
+                   help="Fig-3 permutation fusion (fused packed FFN kernel)")
+    p.add_argument("--ckpt-dir", default="",
+                   help="restore params; a packed/ export inside is "
+                   "deployed directly")
+    p.add_argument("--fold-to-packed", action="store_true",
+                   help="treat the checkpoint (or init) as masked_dense and "
+                   "fold it to packed before serving (paper Eq. 2)")
     args = p.parse_args(argv)
 
-    cfg = get_config(args.arch, smoke=args.smoke)
-    if not cfg.causal:
+    cfg0 = get_config(args.arch, smoke=args.smoke)
+    if not cfg0.causal:
         raise SystemExit(f"{args.arch} is encoder-only (no decode)")
-    model = build(cfg)
-    params = model.init(jax.random.PRNGKey(0))
-    print(f"serving {cfg.name}: {model.param_count():,} params")
+    cfg, model, params = _load_model(args)
+    print(f"serving {cfg.name}: {model.param_count():,} params "
+          f"(mode={cfg.mpd_mode})")
 
     if args.static:
         _static_main(args, cfg, model, params)

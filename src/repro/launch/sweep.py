@@ -18,6 +18,8 @@ def main():
     p.add_argument("--scheme", default="tp")
     p.add_argument("--mpd-mode", default="packed")
     p.add_argument("--mpd-c", type=int, default=8)
+    p.add_argument("--mpd-fuse", action="store_true",
+                   help="Fig-3 permutation fusion in every cell")
     p.add_argument("--only-arch", default="")
     p.add_argument("--skip-multipod", action="store_true")
     p.add_argument("--skip-calibration", action="store_true")
@@ -33,7 +35,9 @@ def main():
             jobs.append((arch, shape, multi, ok, why))
 
     for i, (arch, shape, multi, ok, why) in enumerate(jobs):
-        tag = f"{arch}__{shape}__{'2x16x16' if multi else '16x16'}__{args.scheme}__{args.mpd_mode}"
+        tag = (f"{arch}__{shape}__{'2x16x16' if multi else '16x16'}"
+               f"__{args.scheme}__{args.mpd_mode}"
+               f"{'__fused' if args.mpd_fuse else ''}")
         out = os.path.join(args.out, tag + ".json")
         if os.path.exists(out):
             print(f"[{i+1}/{len(jobs)}] {tag}: cached", flush=True)
@@ -50,6 +54,8 @@ def main():
                "--arch", arch, "--shape", shape, "--scheme", args.scheme,
                "--mpd-mode", args.mpd_mode, "--mpd-c", str(args.mpd_c),
                "--out", out]
+        if args.mpd_fuse:
+            cmd += ["--mpd-fuse"]
         if multi:
             cmd += ["--multi-pod", "--skip-calibration"]
         if args.skip_calibration:

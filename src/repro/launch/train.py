@@ -28,6 +28,14 @@ def main(argv=None):
     p.add_argument("--lr", type=float, default=3e-3)
     p.add_argument("--mpd-c", type=int, default=0, help="0 = config default")
     p.add_argument("--mpd-fuse", action="store_true")
+    p.add_argument("--mpd-mode", choices=("", "packed", "masked_dense"),
+                   default="", help="override the config's training "
+                   "parameterization (masked_dense = paper-faithful)")
+    p.add_argument("--fold-to-packed", action="store_true",
+                   help="after training, fold the masked_dense weights into "
+                   "a packed deployment checkpoint (<ckpt-dir>/packed); "
+                   "--mpd-fuse additionally applies the Fig-3 perm-fusion "
+                   "rewrite so FFNs hit the one-dispatch fused kernel")
     p.add_argument("--ckpt-dir", default="")
     p.add_argument("--compress-grads", action="store_true")
     p.add_argument("--data-axis", type=int, default=0,
@@ -39,6 +47,15 @@ def main(argv=None):
         over["mpd_c"] = args.mpd_c
     if args.mpd_fuse:
         over["mpd_fuse"] = True
+    if args.mpd_mode:
+        over["mpd_mode"] = args.mpd_mode
+    if args.fold_to_packed:
+        if not args.ckpt_dir:
+            raise SystemExit("--fold-to-packed needs --ckpt-dir for the "
+                             "packed export")
+        if over.setdefault("mpd_mode", "masked_dense") != "masked_dense":
+            raise SystemExit("--fold-to-packed folds a masked_dense run; "
+                             "drop --mpd-mode packed")
     cfg = get_config(args.arch, smoke=args.smoke, **over)
     if cfg.frontend != "token":
         raise SystemExit(f"{args.arch} uses an embedding frontend; "
@@ -62,6 +79,16 @@ def main(argv=None):
         ckpt_dir=args.ckpt_dir, ckpt_every=50 if args.ckpt_dir else 0)
     out = run(model, tcfg, data, num_steps=args.steps, mesh=mesh, rules=rules)
     print(f"final loss {out['history'][-1]:.4f}")
+
+    if args.fold_to_packed:
+        import dataclasses
+
+        from repro.checkpoint import checkpoint as ckpt_lib
+        d = ckpt_lib.export_packed(args.ckpt_dir, args.steps, model,
+                                   out["params"], fuse=args.mpd_fuse)
+        n_pk = build(dataclasses.replace(cfg, mpd_mode="packed")).param_count()
+        print(f"packed export: {d} "
+              f"({n_pk:,} params, was {model.param_count():,})")
 
 
 if __name__ == "__main__":

@@ -5,7 +5,9 @@ inserts the log-sum-exp combine collectives when the KV sequence axis is
 sharded — used by the ``long_500k`` cells).
 
 All projections route through :class:`repro.models.linear.Linear`, i.e. they
-are MPD-compressible (paper's FC layers).
+are MPD-compressible (paper's FC layers). Projection biases (``use_bias``
+archs) execute inside the kernel dispatch as fused epilogues — ``Linear
+.apply`` pushes them down; nothing composes bias/activation outside here.
 """
 
 from __future__ import annotations

@@ -83,15 +83,71 @@ class FFNSpec:
             a["w_gate"] = self.w_gate.axes()
         return a
 
+    # ----------------------------------------------------------- fused route
+    def fused_packed(self) -> bool:
+        """True when the whole MLP can execute as ONE block-diagonal fused
+        kernel (:func:`repro.kernels.ops.fused_ffn`): all projections packed
+        with the inner permutations cancelled at build/export time, so the
+        hidden stays in block order and blocks are fully independent."""
+        up, gate, down = self.w_up, self.w_gate, self.w_down
+        if up is None or down is None:
+            return False
+        su, sd = up.spec, down.spec
+        if not (su.mode == "packed" and sd.mode == "packed"
+                and su.mask is not None and sd.mask is not None):
+            return False
+        if not (su.skip_out_perm and sd.skip_in_perm):
+            return False
+        if su.mask.nb != sd.mask.nb:
+            return False
+        if gate is not None:
+            import numpy as np
+            sg = gate.spec
+            if not (sg.mode == "packed" and sg.mask is not None
+                    and sg.skip_out_perm and sg.mask.nb == su.mask.nb
+                    and np.array_equal(sg.mask.in_perm, su.mask.in_perm)):
+                return False
+        return True
+
+    def _packed_bias(self, lin, p):
+        """Layer bias re-indexed into the kernel's packed output order."""
+        if not lin.spec.use_bias:
+            return None
+        from repro.core import permute
+        return permute.apply(permute.invert(lin.spec.mask.out_perm), p["b"])
+
+    def _apply_fused(self, params, x):
+        from repro.core import fold as fold_lib
+        from repro.kernels import ops
+        up, gate, down = self.w_up, self.w_gate, self.w_down
+        xp = fold_lib.pack_inputs(up.spec.mask, x, skip=up.spec.skip_in_perm)
+        act = {"swiglu": "silu", "gelu": "gelu", "relu": "relu"}[self.kind]
+        y = ops.fused_ffn(
+            xp, params["w_up"]["w"], params["w_down"]["w"],
+            w_gate=params["w_gate"]["w"] if gate is not None else None,
+            b_up=self._packed_bias(up, params["w_up"]),
+            b_gate=(self._packed_bias(gate, params["w_gate"])
+                    if gate is not None else None),
+            b_down=self._packed_bias(down, params["w_down"]),
+            activation=act)
+        y = fold_lib.unpack_outputs(down.spec.mask, y,
+                                    skip=down.spec.skip_out_perm)
+        if down.out_axis is not None and y.ndim >= 2:
+            from repro.dist.sharding import shard
+            y = shard(y, "batch", *([None] * (y.ndim - 2) + [down.out_axis]))
+        return y
+
     def apply(self, params, x):
-        h = self.w_up.apply(params["w_up"], x)
+        if self.fused_packed():
+            return self._apply_fused(params, x)
+        # epilogues ride the projection dispatch (fused into the kernels on
+        # the compressed modes) instead of composing as separate XLA ops
         if self.kind == "swiglu":
-            g = self.w_gate.apply(params["w_gate"], x)
-            h = jax.nn.silu(g) * h
-        elif self.kind == "gelu":
-            h = jax.nn.gelu(h)
-        elif self.kind == "relu":
-            h = jnp.maximum(h, 0)
+            h = self.w_up.apply(params["w_up"], x)
+            g = self.w_gate.apply(params["w_gate"], x, activation="silu")
+            h = g * h
+        elif self.kind in ("gelu", "relu"):
+            h = self.w_up.apply(params["w_up"], x, activation=self.kind)
         else:
             raise ValueError(self.kind)
         return self.w_down.apply(params["w_down"], h)

@@ -56,8 +56,12 @@ class Linear:
     def init(self, key, dtype=jnp.float32):
         return mpd.init(key, self.spec, dtype)
 
-    def apply(self, params, x):
-        y = mpd.apply(self.spec, params, x)
+    def apply(self, params, x, *, activation=None, extra_bias=None):
+        """Forward with the bias/activation epilogue fused into the kernel
+        dispatch (see :func:`repro.core.mpd.apply`). Model code passes its
+        elementwise epilogues down here instead of composing them outside."""
+        y = mpd.apply(self.spec, params, x, activation=activation,
+                      extra_bias=extra_bias)
         if self.out_axis is not None and y.ndim >= 2:
             # re-anchor GSPMD propagation on (batch, ..., out_axis) — the MPD
             # pack/unpack gathers otherwise leave the activation unsharded

@@ -77,8 +77,9 @@ class MambaSpec:
         proj = self.w_x.apply(params["w_x"], xc)
         dt, Bm, Cm = jnp.split(proj, [self.dt_rank, self.dt_rank + self.d_state],
                                axis=-1)
-        dt = jax.nn.softplus(self.w_dt.apply(params["w_dt"], dt)
-                             + params["dt_bias"])        # (B,T,di)
+        # softplus + dt_bias ride the projection dispatch as a fused epilogue
+        dt = self.w_dt.apply(params["w_dt"], dt, activation="softplus",
+                             extra_bias=params["dt_bias"])  # (B,T,di)
         return dt, Bm, Cm
 
     def apply(self, params, x, state=None, valid=None):

@@ -559,6 +559,18 @@ class Model:
                                      w=params["unembed"]["w"] * m)
         return params
 
+    # ------------------------------------------------------- fold / export
+    def to_packed(self, params, *, fuse: bool = False,
+                  check_residual: bool = True, atol: float = 1e-6):
+        """Fold this trained ``masked_dense`` model into its packed
+        inference twin (paper Eq. 2 applied model-wide). Returns
+        ``(packed_model, packed_params)``; with ``fuse=True`` the Fig-3
+        permutation-cancellation rewrite is applied post hoc. See
+        :mod:`repro.core.export`."""
+        from repro.core import export as export_lib
+        return export_lib.fold_model(self, params, fuse=fuse,
+                                     check_residual=check_residual, atol=atol)
+
     # ------------------------------------------------------------- accounting
     def param_count(self) -> int:
         model = self

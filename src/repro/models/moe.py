@@ -87,11 +87,23 @@ class MoESpec:
         ks = jax.random.split(key, 6)
         scale_up = float(1.0 / np.sqrt(self.d_model))
         scale_dn = float(1.0 / np.sqrt(self.d_ff))
+
+        def expert_w(k, mask, d_in, d_out, scale):
+            w = jax.random.normal(
+                k, self._expert_shape(mask, d_in, d_out), dtype) * scale
+            if mask is not None and self.mode == "masked_dense":
+                # mask after standard init (paper setup; keeps off-mask
+                # weights exact zeros so the fold/export pass accepts an
+                # untrained checkpoint too)
+                from repro.core.mask import mask_dense
+                w = w * jnp.asarray(mask_dense(mask, np.float32), dtype)
+            return w
+
         p = {
             "router": self.router.init(ks[0], jnp.float32),  # router in f32
-            "w_up": jax.random.normal(ks[1], self._expert_shape(self.mask_up, self.d_model, self.d_ff), dtype) * scale_up,
-            "w_gate": jax.random.normal(ks[2], self._expert_shape(self.mask_up, self.d_model, self.d_ff), dtype) * scale_up,
-            "w_down": jax.random.normal(ks[3], self._expert_shape(self.mask_down, self.d_ff, self.d_model), dtype) * scale_dn,
+            "w_up": expert_w(ks[1], self.mask_up, self.d_model, self.d_ff, scale_up),
+            "w_gate": expert_w(ks[2], self.mask_up, self.d_model, self.d_ff, scale_up),
+            "w_down": expert_w(ks[3], self.mask_down, self.d_ff, self.d_model, scale_dn),
         }
         if self.shared is not None:
             p["shared"] = self.shared.init(ks[4], dtype)
@@ -117,18 +129,23 @@ class MoESpec:
         return a
 
     # --- expert matmuls (dense, masked-dense, or packed block-diagonal) ----
-    def _expert_mm(self, x, w, mask: Optional[MaskSpec]):
-        """x: (E, C, d_in); w: dense (E, d_in, d_out) or packed (E, nb, bi, bo)."""
+    def _expert_mm(self, x, w, mask: Optional[MaskSpec], activation=None):
+        """x: (E, C, d_in); w: dense (E, d_in, d_out) or packed (E, nb, bi, bo).
+
+        ``activation`` rides the expert matmul as a fused epilogue (on the
+        packed path it runs pre-unpack in block order — elementwise, so it
+        commutes with the output permutation)."""
+        from repro.kernels.ref import ACTIVATIONS
         if mask is None or self.mode == "dense":
-            return jnp.einsum("ecd,edf->ecf", x, w)
+            return ACTIVATIONS[activation](jnp.einsum("ecd,edf->ecf", x, w))
         if self.mode == "masked_dense":  # paper-faithful Fig 2 path
             from repro.core.mask import mask_dense
             m = jnp.asarray(mask_dense(mask), w.dtype)
-            return jnp.einsum("ecd,edf->ecf", x, w * m)
+            return ACTIVATIONS[activation](jnp.einsum("ecd,edf->ecf", x, w * m))
         xp = fold_lib.pack_inputs(mask, x)  # gather cols into block order
         E, C, _ = xp.shape
         xb = xp.reshape(E, C, mask.nb, mask.block_in)
-        yb = jnp.einsum("ecnk,enko->ecno", xb, w)
+        yb = ACTIVATIONS[activation](jnp.einsum("ecnk,enko->ecno", xb, w))
         y = yb.reshape(E, C, mask.nb * mask.block_out)
         return fold_lib.unpack_outputs(mask, y)
 
@@ -165,8 +182,9 @@ class MoESpec:
 
         h = self._expert_mm(eb, params["w_up"], self.mask_up)
         if self.gated:
-            g = self._expert_mm(eb, params["w_gate"], self.mask_up)
-            h = jax.nn.silu(g) * h
+            g = self._expert_mm(eb, params["w_gate"], self.mask_up,
+                                activation="silu")
+            h = g * h
         h = shard(h, "experts", None, None)
         out = self._expert_mm(h, params["w_down"], self.mask_down)    # (E, C, D)
         out = shard(out, "experts", None, None)

@@ -116,7 +116,7 @@ class RWKVSpec:
         r = self.wr.apply(params["wr"], xr).reshape(B, T, H, N)
         k = self.wk.apply(params["wk"], xk).reshape(B, T, H, N)
         v = self.wv.apply(params["wv"], xv).reshape(B, T, H, N)
-        g = jax.nn.silu(self.wg.apply(params["wg"], xg))
+        g = self.wg.apply(params["wg"], xg, activation="silu")
         w = jnp.exp(-jnp.exp(
             params["w0"].astype(jnp.float32)
             + jnp.tanh(xw @ params["wA"]) @ params["wB"]
@@ -171,8 +171,9 @@ class RWKVSpec:
         mix = params["mix_c"]
         xk = x * mix[0] + xs * (1 - mix[0])
         xr = x * mix[1] + xs * (1 - mix[1])
-        k = jnp.square(jnp.maximum(self.ck.apply(params["ck"], xk), 0))
-        r = jax.nn.sigmoid(self.cr.apply(params["cr"], xr))
+        # squared-ReLU and sigmoid fuse into the projection epilogues
+        k = self.ck.apply(params["ck"], xk, activation="sqrelu")
+        r = self.cr.apply(params["cr"], xr, activation="sigmoid")
         return r * self.cv.apply(params["cv"], k), _last_valid(x, valid)
 
     def init_state(self, batch: int, dtype=jnp.float32):

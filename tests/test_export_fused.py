@@ -1,0 +1,335 @@
+"""Fused-epilogue kernels + whole-model fold/export pass.
+
+Covers the three contracts of the epilogue-fused execution path:
+
+* fused bias/activation forms of ``bdmm``/``masked_matmul``/``fused_ffn``
+  differentiate identically to the unfused composition (and keep the
+  off-mask-grads-are-zero invariant);
+* the perm-fused packed FFN dispatches ONE kernel — no separate bias,
+  activation, gather, or dot ops in the jaxpr;
+* a ``masked_dense``-trained model folds to packed (``Model.to_packed`` /
+  ``checkpoint.export_packed``) with identical logits, the post-hoc Fig-3
+  perm-fusion rewrite preserves them, and a folded checkpoint drives the
+  serve engine token-for-token identically to the masked model.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import export as export_lib
+from repro.core import permute
+from repro.kernels import fused_ffn as ffn_kernel
+from repro.kernels import ops, ref
+from repro.models import ModelConfig, build
+
+
+def _relerr(a, b):
+    a = np.asarray(a, np.float32)
+    b = np.asarray(b, np.float32)
+    return np.max(np.abs(a - b)) / (np.max(np.abs(b)) + 1e-9)
+
+
+# ---------------------------------------------------------------- fused VJPs
+
+@pytest.mark.parametrize("activation", [None, "relu", "gelu", "silu"])
+@pytest.mark.parametrize("use_bias", [False, True])
+def test_bdmm_fused_grads(activation, use_bias):
+    """grad through the fused epilogue == grad through the composition."""
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    x = jax.random.normal(ks[0], (16, 4 * 24))
+    w = jax.random.normal(ks[1], (4, 24, 16)) * 0.3
+    b = jax.random.normal(ks[2], (4 * 16,)) * 0.1 if use_bias else None
+    args = (x, w) + ((b,) if use_bias else ())
+    idx = tuple(range(len(args)))
+
+    def f_fused(*a):
+        return jnp.sum(ops.bdmm(a[0], a[1], a[2] if use_bias else None,
+                                activation=activation) ** 2)
+
+    def f_ref(*a):
+        y = ref.bdmm_ref(a[0], a[1])
+        if use_bias:
+            y = y + a[2]
+        return jnp.sum(ref.ACTIVATIONS[activation](y) ** 2)
+
+    for g1, g2 in zip(jax.grad(f_fused, idx)(*args), jax.grad(f_ref, idx)(*args)):
+        assert _relerr(g1, g2) < 1e-5
+
+
+@pytest.mark.parametrize("activation", [None, "gelu"])
+def test_masked_matmul_fused_grads(activation):
+    ks = jax.random.split(jax.random.PRNGKey(1), 4)
+    x = jax.random.normal(ks[0], (12, 48))
+    w = jax.random.normal(ks[1], (48, 40)) * 0.3
+    m = (jax.random.uniform(ks[2], (48, 40)) < 0.25).astype(jnp.float32)
+    b = jax.random.normal(ks[3], (40,)) * 0.1
+
+    def f_fused(x, w, b):
+        return jnp.sum(ops.masked_matmul(x, w, m, b, activation=activation) ** 2)
+
+    def f_ref(x, w, b):
+        return jnp.sum(ref.ACTIVATIONS[activation](
+            ref.masked_matmul_ref(x, w, m) + b) ** 2)
+
+    gs1 = jax.grad(f_fused, (0, 1, 2))(x, w, b)
+    gs2 = jax.grad(f_ref, (0, 1, 2))(x, w, b)
+    for g1, g2 in zip(gs1, gs2):
+        assert _relerr(g1, g2) < 1e-5
+    # masked-dense invariant survives the fused epilogue
+    assert np.all(np.asarray(gs1[1]) * (1 - np.asarray(m)) == 0)
+
+
+# ------------------------------------------------------------ fused FFN kernel
+
+@pytest.mark.parametrize("gated", [True, False])
+@pytest.mark.parametrize("use_bias", [True, False])
+def test_fused_ffn_kernel_vs_ref(gated, use_bias):
+    ks = jax.random.split(jax.random.PRNGKey(2), 7)
+    m, nb, bi, f, bo = 24, 4, 16, 40, 12
+    x = jax.random.normal(ks[0], (m, nb * bi))
+    wu = jax.random.normal(ks[1], (nb, bi, f)) * 0.2
+    wg = jax.random.normal(ks[2], (nb, bi, f)) * 0.2 if gated else None
+    wd = jax.random.normal(ks[3], (nb, f, bo)) * 0.2
+    bu = jax.random.normal(ks[4], (nb * f,)) * 0.1 if use_bias else None
+    bg = jax.random.normal(ks[5], (nb * f,)) * 0.1 if (use_bias and gated) else None
+    bd = jax.random.normal(ks[6], (nb * bo,)) * 0.1 if use_bias else None
+    act = "silu" if gated else "gelu"
+    y = ffn_kernel.fused_ffn(x, wu, wd, wg, bu, bg, bd, activation=act,
+                             interpret=True, bm=8, bf=8)
+    yr = ref.fused_ffn_ref(x, wu, wd, w_gate=wg, b_up=bu, b_gate=bg,
+                           b_down=bd, activation=act)
+    assert _relerr(y, yr) < 2e-5
+
+
+def test_fused_ffn_grads_match_decomposed():
+    ks = jax.random.split(jax.random.PRNGKey(3), 7)
+    m, nb, bi, f, bo = 10, 2, 8, 24, 8
+    x = jax.random.normal(ks[0], (m, nb * bi))
+    wu = jax.random.normal(ks[1], (nb, bi, f)) * 0.3
+    wg = jax.random.normal(ks[2], (nb, bi, f)) * 0.3
+    wd = jax.random.normal(ks[3], (nb, f, bo)) * 0.3
+    bu = jax.random.normal(ks[4], (nb * f,)) * 0.1
+    bg = jax.random.normal(ks[5], (nb * f,)) * 0.1
+    bd = jax.random.normal(ks[6], (nb * bo,)) * 0.1
+
+    def f_fused(x, wu, wg, wd, bu, bg, bd):
+        return jnp.sum(ops.fused_ffn(x, wu, wd, w_gate=wg, b_up=bu, b_gate=bg,
+                                     b_down=bd, activation="silu") ** 2)
+
+    def f_dec(x, wu, wg, wd, bu, bg, bd):
+        u = ref.bdmm_ref(x, wu, bu)
+        g = ref.bdmm_ref(x, wg, bg)
+        return jnp.sum(ref.bdmm_ref(jax.nn.silu(g) * u, wd, bd) ** 2)
+
+    idx = tuple(range(7))
+    for g1, g2 in zip(jax.grad(f_fused, idx)(x, wu, wg, wd, bu, bg, bd),
+                      jax.grad(f_dec, idx)(x, wu, wg, wd, bu, bg, bd)):
+        assert _relerr(g1, g2) < 1e-5
+
+
+def _collect_prims(jaxpr, out):
+    """Primitive names, recursing through call/custom_vjp wrappers but NOT
+    into pallas_call (the kernel body's ops are inside the one dispatch)."""
+    for e in jaxpr.eqns:
+        out.append(e.primitive.name)
+        if e.primitive.name == "pallas_call":
+            continue
+        for v in e.params.values():
+            vs = v if isinstance(v, (list, tuple)) else [v]
+            for j in vs:
+                inner = getattr(j, "jaxpr", None)
+                if inner is not None and hasattr(inner, "eqns"):
+                    _collect_prims(inner, out)
+                elif hasattr(j, "eqns"):
+                    _collect_prims(j, out)
+    return out
+
+
+def test_fused_ffn_single_dispatch_jaxpr():
+    """Acceptance: the fully perm-fused packed FFN is ONE kernel dispatch —
+    no separate bias/activation/gather/dot ops in the jaxpr."""
+    from repro.core.policy import uniform
+    from repro.models.ffn import FFNSpec
+
+    d_model, d_ff = 64, 128
+    pol = uniform(4, mode="packed")
+    spec = FFNSpec.make(pol, d_model, d_ff, "swiglu", fuse_perms=True)
+    assert spec.fused_packed()
+    # identity boundary perms: the interior is the whole FFN
+    id_in = permute.identity(d_model)
+    up_mask = dataclasses.replace(spec.w_up.spec.mask, in_perm=id_in)
+    down_mask = dataclasses.replace(spec.w_down.spec.mask,
+                                    out_perm=permute.identity(d_model))
+    spec = dataclasses.replace(
+        spec,
+        w_up=dataclasses.replace(spec.w_up, spec=dataclasses.replace(
+            spec.w_up.spec, mask=up_mask)),
+        w_gate=dataclasses.replace(spec.w_gate, spec=dataclasses.replace(
+            spec.w_gate.spec, mask=up_mask)),
+        w_down=dataclasses.replace(spec.w_down, spec=dataclasses.replace(
+            spec.w_down.spec, mask=down_mask)))
+    params = spec.init(jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (8, d_model))
+
+    old = ops.get_backend()
+    ops.set_backend("interpret")
+    try:
+        jaxpr = jax.make_jaxpr(lambda p, x: spec.apply(p, x))(params, x)
+    finally:
+        ops.set_backend(old)
+    prims = _collect_prims(jaxpr.jaxpr, [])
+    assert prims.count("pallas_call") == 1, prims
+    for banned in ("dot_general", "gather", "add", "mul", "max", "logistic"):
+        assert banned not in prims, (banned, prims)
+
+
+# ------------------------------------------------------- whole-model fold pass
+
+MD_CFG = ModelConfig(n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+                     d_ff=128, vocab=128, mpd_c=4, mpd_mode="masked_dense",
+                     use_bias=True)
+
+
+def _trained_masked(cfg, steps=3):
+    """A few real masked_dense train steps (optimizer + mask projection)."""
+    from repro.data import SyntheticLM
+    from repro.optim import OptConfig
+    from repro.train import TrainConfig, run
+
+    model = build(cfg)
+    data = SyntheticLM(vocab=cfg.vocab, seq_len=16, global_batch=4, seed=0)
+    out = run(model, TrainConfig(opt=OptConfig(lr=3e-3), log_every=0),
+              data, num_steps=steps)
+    return model, out["params"]
+
+
+def test_model_fold_roundtrip_after_training():
+    """N masked_dense train steps -> to_packed -> identical logits, 1/c FC
+    params (paper Eq. 2 end-to-end)."""
+    model, params = _trained_masked(MD_CFG)
+    model_pk, params_pk = model.to_packed(params)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 12), 0, MD_CFG.vocab)
+    lg_md = model.logits(params, toks)
+    lg_pk = model_pk.logits(params_pk, toks)
+    scale = float(jnp.max(jnp.abs(lg_md))) + 1e-6
+    np.testing.assert_allclose(np.asarray(lg_pk), np.asarray(lg_md),
+                               atol=1e-5 * scale)
+    n_md = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(params))
+    n_pk = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(params_pk))
+    assert n_pk < n_md
+
+
+@pytest.mark.parametrize("train_fuse", [False, True])
+def test_posthoc_perm_fusion_preserves_logits(train_fuse):
+    """The Fig-3 rewrite applied at export time changes the dataflow (merged
+    gathers / fused kernel) but not the function."""
+    cfg = dataclasses.replace(MD_CFG, mpd_fuse=train_fuse)
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    # per-index random biases: a wrong permutation in the gate-bias
+    # re-indexing would pass with constant vectors
+    key = jax.random.PRNGKey(42)
+    params = jax.tree.map(
+        lambda x: x + 0.1 * jax.random.normal(key, x.shape, x.dtype)
+        if x.ndim == 1 else x, params)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0, cfg.vocab)
+    m_plain, p_plain = model.to_packed(params, fuse=False)
+    m_fused, p_fused = model.to_packed(params, fuse=True)
+    lg_p = m_plain.logits(p_plain, toks)
+    lg_f = m_fused.logits(p_fused, toks)
+    scale = float(jnp.max(jnp.abs(lg_p))) + 1e-6
+    np.testing.assert_allclose(np.asarray(lg_f), np.asarray(lg_p),
+                               atol=1e-5 * scale)
+    ffn = m_fused.block_specs[0]["ffn"]
+    # rewrite leaves the up output packed; aligned (fuse-trained) masks
+    # collapse onto the one-dispatch fused kernel
+    assert ffn.w_up.spec.skip_out_perm
+    assert ffn.fused_packed() == train_fuse
+
+
+def test_fold_residual_check_fires():
+    model = build(MD_CFG)
+    params = model.init(jax.random.PRNGKey(0))
+    bad = jax.tree.map(lambda x: x, params)
+    bad["blocks"][0]["ffn"]["w_up"] = dict(
+        bad["blocks"][0]["ffn"]["w_up"],
+        w=bad["blocks"][0]["ffn"]["w_up"]["w"] + 1.0)
+    with pytest.raises(export_lib.FoldResidualError):
+        model.to_packed(bad)
+
+
+def test_fold_rejects_packed_model():
+    cfg = dataclasses.replace(MD_CFG, mpd_mode="packed")
+    model = build(cfg)
+    with pytest.raises(ValueError):
+        model.to_packed(model.init(jax.random.PRNGKey(0)))
+
+
+def test_moe_model_folds():
+    cfg = ModelConfig(n_layers=2, d_model=64, n_heads=4, n_kv_heads=4,
+                      d_ff=128, vocab=128, pattern=("attn_moe",),
+                      moe_experts=4, moe_top_k=2, moe_d_ff=64,
+                      moe_capacity=8.0, mpd_c=4, mpd_mode="masked_dense")
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    model_pk, params_pk = model.to_packed(params)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0, cfg.vocab)
+    lg_md = model.logits(params, toks)
+    lg_pk = model_pk.logits(params_pk, toks)
+    scale = float(jnp.max(jnp.abs(lg_md))) + 1e-6
+    np.testing.assert_allclose(np.asarray(lg_pk), np.asarray(lg_md),
+                               atol=1e-4 * scale)
+    assert params_pk["blocks"][0]["ffn"]["w_up"].ndim == 5  # (L, E, nb, bi, bo)
+
+
+# -------------------------------------------------- checkpoint + serve engine
+
+def test_export_packed_checkpoint_roundtrip(tmp_path):
+    from repro.checkpoint import checkpoint as ckpt_lib
+
+    cfg = dataclasses.replace(MD_CFG, mpd_fuse=True)
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    key = jax.random.PRNGKey(42)
+    params = jax.tree.map(  # random biases exercise the rewrite's re-index
+        lambda x: x + 0.1 * jax.random.normal(key, x.shape, x.dtype)
+        if x.ndim == 1 else x, params)
+    ckpt_lib.export_packed(str(tmp_path), 7, model, params, fuse=True)
+    assert ckpt_lib.has_packed(str(tmp_path))
+    model2, params2 = ckpt_lib.load_packed(str(tmp_path))
+    assert model2.cfg.mpd_mode == "packed"
+    assert model2.block_specs[0]["ffn"].fused_packed()  # rewrite re-derived
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0, cfg.vocab)
+    m_pk, p_pk = model.to_packed(params, fuse=True)
+    np.testing.assert_allclose(np.asarray(model2.logits(params2, toks)),
+                               np.asarray(m_pk.logits(p_pk, toks)), atol=1e-6)
+
+
+def test_serve_engine_on_folded_checkpoint(tmp_path):
+    """Serve-engine smoke on a folded checkpoint: greedy output is
+    token-for-token identical to serving the masked_dense model."""
+    from repro.checkpoint import checkpoint as ckpt_lib
+    from repro.serve import Engine, Request
+
+    model, params = _trained_masked(MD_CFG, steps=2)
+    ckpt_lib.save(str(tmp_path), 2, {"params": params})
+
+    # the deployment path: restore -> fold -> engine
+    like = {"params": model.init(jax.random.PRNGKey(0))}
+    restored = ckpt_lib.restore(str(tmp_path), 2, like)["params"]
+    model_pk, params_pk = model.to_packed(restored)
+
+    rng = np.random.default_rng(0)
+    mk = lambda: [Request(id=i,
+                          prompt=rng.integers(0, MD_CFG.vocab,
+                                              size=int(rng.integers(3, 12))),
+                          max_new_tokens=int(rng.integers(2, 6)))
+                  for i in range(4)]
+    out_md = Engine(model, params, n_slots=2, max_len=32).run(mk())
+    rng = np.random.default_rng(0)
+    out_pk = Engine(model_pk, params_pk, n_slots=2, max_len=32).run(mk())
+    assert out_md == out_pk
