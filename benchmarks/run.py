@@ -10,6 +10,8 @@ Prints ``name,value,derived`` CSV rows. Sections:
   * serve,*    — static vs continuous-batching throughput (BENCH_serve.json)
   * fused,*    — fused vs unfused packed FFN + folded vs masked_dense
                  serving (BENCH_fused.json)
+  * quant,*    — int8 packed decode vs fp + decode-path grid + logit
+                 drift (BENCH_quant.json)
   * roofline,* — per-cell roofline terms from the dry-run sweep (if present)
 
 ``--fast`` trims step counts for CI-style runs; the full run reproduces the
@@ -28,7 +30,7 @@ def main() -> None:
     ap.add_argument("--skip-roofline", action="store_true")
     ap.add_argument("--sections", default="",
                     help="comma list: table1,fig4,fig5,speedup,kernels,"
-                         "serve,fused,roofline")
+                         "serve,fused,quant,roofline")
     args = ap.parse_args()
     want = set(args.sections.split(",")) if args.sections else None
 
@@ -58,6 +60,9 @@ def main() -> None:
     if on("fused"):
         from benchmarks import fused_bench
         rows += fused_bench.rows(smoke=args.fast)
+    if on("quant"):
+        from benchmarks import quant_bench
+        rows += quant_bench.rows(smoke=args.fast)
     for r in rows:
         print(r)
 

@@ -183,7 +183,8 @@ PACKED_SUBDIR = "packed"
 
 
 def export_packed(ckpt_dir: str, step: int, model, params,
-                  *, fuse: bool = False, blocking: bool = True) -> str:
+                  *, fuse: bool = False, quantize: Optional[str] = None,
+                  blocking: bool = True) -> str:
     """Fold a trained ``masked_dense`` model and publish the packed params
     as a deployment checkpoint under ``<ckpt_dir>/packed/``.
 
@@ -191,15 +192,28 @@ def export_packed(ckpt_dir: str, step: int, model, params,
     applied) rides in the manifest, so :func:`load_packed` can rebuild the
     serving model from the directory alone. Params hold 1/c of the FC
     weights — this is the artifact the serve engine deploys.
+
+    ``quantize="int8"`` stores int8 blocks + per-output-channel scales
+    (quant round-trip error rides in the manifest); ``"int4"`` additionally
+    nibble-packs the stored blocks (2 weights/byte) — the runtime unpacks
+    back to int8 at load time.
     """
     import dataclasses as _dc
 
-    model_pk, params_pk = model.to_packed(params, fuse=fuse)
+    from repro.core import export as export_lib
+    from repro.kernels import quant as quant_lib
+
+    model_pk, params_pk = model.to_packed(params, fuse=fuse, quantize=quantize)
     extra = {
         "packed_config": _dc.asdict(model_pk.cfg),
         "perm_fused": bool(fuse),
+        "quantize": quantize,
+        "quant_report": getattr(model_pk, "quant_report", None),
         "source_step": int(step),
     }
+    if quantize == "int4":
+        params_pk = export_lib.map_quantized_leaves(
+            model_pk, params_pk, lambda q, lin: quant_lib.pack_int4(q))
     return save(os.path.join(ckpt_dir, PACKED_SUBDIR), step,
                 {"params": params_pk}, extra=extra, blocking=blocking)
 
@@ -226,6 +240,8 @@ def load_packed(ckpt_dir: str, step: Optional[int] = None):
     from repro.core import export as export_lib
     from repro.models import build
 
+    from repro.kernels import quant as quant_lib
+
     d = os.path.join(ckpt_dir, PACKED_SUBDIR)
     if step is None:
         step = latest_step(d)
@@ -235,9 +251,28 @@ def load_packed(ckpt_dir: str, step: Optional[int] = None):
     model = build(_config_from_dict(extra["packed_config"]))
     if extra.get("perm_fused"):
         export_lib.apply_perm_fusion(model)  # spec-only; params pre-rewritten
-    like = jax.eval_shape(lambda k: {"params": model.init(k)},
-                          jax.random.PRNGKey(0))
-    params = restore(d, step, like)["params"]
+    qmode = extra.get("quantize")
+    like_p = jax.eval_shape(lambda k: model.init(k), jax.random.PRNGKey(0))
+    if qmode:
+        # derive the stored structure by tracing the same quantize (+ int4
+        # nibble-pack) transformation the export applied — no report under
+        # tracing, shapes only
+        bits = quant_lib.BITS[qmode]
+        like_p = jax.eval_shape(
+            lambda p: export_lib.quantize_packed(
+                model, p, bits=bits, compute_report=False)[0], like_p)
+        if qmode == "int4":
+            like_p = jax.eval_shape(
+                lambda p: export_lib.map_quantized_leaves(
+                    model, p, lambda q, lin: quant_lib.pack_int4(q)), like_p)
+    params = restore(d, step, {"params": like_p})["params"]
+    if qmode == "int4":
+        # execution format is int8: unpack nibbles once at deploy time
+        params = export_lib.map_quantized_leaves(
+            model, params,
+            lambda q, lin: quant_lib.unpack_int4(q, lin.spec.mask.block_in))
+    if qmode:
+        model.quant_report = extra.get("quant_report")
     return model, params
 
 

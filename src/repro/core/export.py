@@ -27,6 +27,12 @@ carries a bias, that bias vector) change. It is deterministic given the
 config, so a reloaded checkpoint re-derives it (see
 ``repro.checkpoint.load_packed``).
 
+4. optionally quantize the packed blocks (:func:`quantize_packed`):
+   symmetric per-output-channel int8 (or int4-storage) with scales computed
+   at fold time and round-trip error recorded — the paper's "pruning and
+   quantization" combined pipeline, enabled by the block structure (dense,
+   aligned blocks make per-``(block, channel)`` scales natural).
+
 Model structure is walked through :meth:`repro.models.Model._block_linears`
 (late import — core stays importable without the model zoo).
 """
@@ -95,14 +101,17 @@ def _copy_tree(tree):
 
 
 def fold_model(model, params, *, fuse: bool = False, check_residual: bool = True,
-               atol: float = 1e-6) -> Tuple[Any, Dict[str, Any]]:
+               atol: float = 1e-6,
+               quantize: Optional[str] = None) -> Tuple[Any, Dict[str, Any]]:
     """Fold a trained ``masked_dense`` model into its packed inference twin.
 
     Returns ``(packed_model, packed_params)``. ``fuse=True`` additionally
     applies the Fig-3 permutation-cancellation rewrite
     (:func:`apply_perm_fusion`). ``check_residual`` asserts every folded
     weight carries zero off-mask mass (requires concrete — not traced —
-    params).
+    params). ``quantize`` (``"int8"``/``"int4"``) additionally runs
+    :func:`quantize_packed` over the folded blocks — scales computed at
+    fold time, round-trip error recorded on ``packed_model.quant_report``.
     """
     from repro.models import build
 
@@ -165,7 +174,114 @@ def fold_model(model, params, *, fuse: bool = False, check_residual: bool = True
                          f"(mpd_c={cfg.mpd_c}) — nothing to fold")
     if fuse:
         out = apply_perm_fusion(model_pk, out)
+    if quantize is not None:
+        from repro.kernels.quant import BITS
+        out, report = quantize_packed(model_pk, out, bits=BITS[quantize])
+        model_pk.quant_report = report
     return model_pk, out
+
+
+# --------------------------------------------------------------------------
+# post-fold quantization (the paper's "pruning and quantization together")
+# --------------------------------------------------------------------------
+
+def _iter_packed_leaves(model_pk, params):
+    """Yield ``(parent, key, lin, tag)`` for every dict-leaf packed linear
+    (mixer projections, FFN, MoE shared expert, unembed) so passes can
+    rewrite ``parent[key]`` in place. MoE *routed* expert stacks are raw
+    arrays (not ``{"w": ...}`` leaves) and stay fp — the routed matmul is
+    gather-bound per token, not weight-stream-bound like decode."""
+    for bi_, (spec, pstack) in enumerate(zip(model_pk.block_specs,
+                                             params["blocks"])):
+        for path, lin in model_pk._block_linears(spec):
+            if lin.spec.mode != "packed" or lin.spec.mask is None:
+                continue
+            node = pstack
+            for k in path[:-1]:
+                node = node[k]
+            yield node, path[-1], lin, f"blocks[{bi_}]/" + "/".join(path)
+        ffn = spec["ffn"]
+        shared = getattr(ffn, "shared", None) if ffn is not None else None
+        if shared is not None:
+            for wk in ("w_up", "w_gate", "w_down"):
+                lin = getattr(shared, wk, None)
+                if (lin is None or lin.spec.mode != "packed"
+                        or lin.spec.mask is None):
+                    continue
+                yield (pstack["ffn"]["shared"], wk, lin,
+                       f"blocks[{bi_}]/ffn/shared/{wk}")
+    un = model_pk.unembed
+    if un.spec.mode == "packed" and un.spec.mask is not None:
+        yield params, "unembed", un, "unembed"
+
+
+def quantize_packed(model_pk, params, *, bits: int = 8,
+                    compute_report: bool = True):
+    """Quantize every packed linear of a folded model to int-``bits``.
+
+    Each ``{"w": (..., nb, bi, bo)}`` leaf becomes ``{"w_q": int8,
+    "w_scale": (..., nb, bo)}`` (symmetric per-output-channel,
+    :func:`repro.kernels.quant.quantize_blocks`); biases stay fp. Returns
+    ``(params, report)`` — the report carries per-layer round-trip error
+    (``compute_report`` requires concrete params; pass ``False`` under
+    tracing, e.g. for ``jax.eval_shape`` restore templates).
+    """
+    from repro.kernels import quant as quant_lib
+
+    out = _copy_tree(params)
+    report: Optional[Dict[str, Any]] = (
+        {"bits": bits, "layers": {}} if compute_report else None)
+    n_q = 0
+    for parent, key, lin, tag in _iter_packed_leaves(model_pk, out):
+        leaf = parent[key]
+        if "w" not in leaf:
+            continue  # already quantized
+        q, s = quant_lib.quantize_blocks(leaf["w"], bits=bits)
+        new = {k: v for k, v in leaf.items() if k != "w"}
+        new["w_q"], new["w_scale"] = q, s
+        parent[key] = new
+        n_q += 1
+        if compute_report:
+            report["layers"][tag] = quant_lib.quant_error(leaf["w"], q, s)
+    if n_q == 0:
+        raise ValueError("quantize_packed: no packed linears found "
+                         "(is this a folded/packed model?)")
+    if compute_report:
+        rms = [l["rel_rms"] for l in report["layers"].values()]
+        report["n_layers"] = n_q
+        report["max_rel_rms"] = max(rms)
+        report["mean_rel_rms"] = float(np.mean(rms))
+    return out, report
+
+
+def dequantize_packed(model_pk, params):
+    """Inverse of :func:`quantize_packed` (up to rounding): every
+    ``{"w_q", "w_scale"}`` leaf becomes an fp ``{"w"}`` leaf again, so the
+    quantized artifact can run through the fp kernels — the reference point
+    for drift/equivalence checks."""
+    from repro.kernels import quant as quant_lib
+
+    out = _copy_tree(params)
+    for parent, key, _lin, _tag in _iter_packed_leaves(model_pk, out):
+        leaf = parent[key]
+        if "w_q" in leaf:
+            new = {k: v for k, v in leaf.items()
+                   if k not in ("w_q", "w_scale")}
+            new["w"] = quant_lib.dequantize_blocks(leaf["w_q"],
+                                                   leaf["w_scale"])
+            parent[key] = new
+    return out
+
+
+def map_quantized_leaves(model_pk, params, fn):
+    """Apply ``fn(w_q, lin) -> new_w_q`` to every quantized leaf (int4
+    nibble pack/unpack for checkpoint storage rides through here)."""
+    out = _copy_tree(params)
+    for parent, key, lin, _tag in _iter_packed_leaves(model_pk, out):
+        leaf = parent[key]
+        if "w_q" in leaf:
+            parent[key] = dict(leaf, w_q=fn(leaf["w_q"], lin))
+    return out
 
 
 def apply_perm_fusion(model_pk, params: Optional[Dict[str, Any]] = None):

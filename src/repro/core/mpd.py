@@ -155,8 +155,17 @@ def apply(spec: MPDLinearSpec, params: Params, x, *,
         m = spec.mask
         xp = fold_lib.pack_inputs(m, x, skip=spec.skip_in_perm)
         bp = None if b is None else permute.apply(permute.invert(m.out_perm), b)
-        yp = ops.bdmm(xp, params["w"], bp, activation=activation,
-                      precision=precision)
+        from repro.kernels.quant import is_quantized
+        if is_quantized(params):
+            # quantized deployment artifact (repro.core.export quantize
+            # pass): int8 blocks + per-output-channel scales, already in
+            # packed order — streamed by the int8 kernel, dequantized
+            # in-register. Inference-only (no VJP).
+            yp = ops.bdmm_quant(xp, params["w_q"], params["w_scale"], bp,
+                                activation=activation, precision=precision)
+        else:
+            yp = ops.bdmm(xp, params["w"], bp, activation=activation,
+                          precision=precision)
         y = fold_lib.unpack_outputs(m, yp, skip=spec.skip_out_perm)
     return y
 

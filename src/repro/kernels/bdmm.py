@@ -11,17 +11,36 @@ MXU-aligned tile, there is no indexing metadata, and blocks are fully
 independent (the property the paper exploits for parallel speedup — here it
 additionally makes the ``nb`` axis shardable across chips).
 
+Quantized weights
+-----------------
+``wp`` may be int8 (symmetric per-output-channel quantization from
+:mod:`repro.kernels.quant`) with ``scale: (nb, bo)`` riding in as one extra
+operand. Weight tiles stream from HBM at 1 byte/element and are widened
+in-register; because the scale is per *output channel* it commutes with the
+K-accumulation, so the f32 accumulator holds raw int-products and the
+single ``acc * scale`` rescale runs once in the epilogue — the memory-bound
+decode path pays int8 HBM bandwidth, not fp32.
+
 TPU mapping
 -----------
 Grid ``(m_tiles, nb, o_tiles, k_tiles)`` with K innermost ("arbitrary"
 semantics) accumulating into a f32 VMEM scratch tile; the epilogue runs on
 the last K step. Block shapes default to MXU-native ``128×128`` output tiles
-with a ``512``-deep K stream, giving a working set of
+with a ``512``-deep K stream. Awkward (prime/odd) dims are padded to the
+next tile multiple instead of degrading the tile search (zero rows/cols are
+exact; see :mod:`repro.kernels.tiling`).
 
-    bm*bk (x) + bk*bn (w) + bm*bn*4B (acc) ≈ 128·512·2B·2 + 64KB ≈ 320 KB
-
-per core — comfortably inside the ~16 MB VMEM with room for double-buffering
-(the default pipeline depth of 2 is applied by Pallas automatically).
+Decode-shaped path
+------------------
+Steady-state serve decode runs ``m = n_slots`` (≈8) rows — a 128-row m-tile
+wastes 15/16 of the MXU feed and the K-innermost revisiting grid re-reads
+the tiny activation every step. When ``m`` is small the wrapper switches to
+a weight-stationary variant: ``m`` padded to the sublane multiple, a flat
+``(nb, o_tiles)`` grid with the full K depth resident per step (decode-side
+``bi = d_in/c`` is small by construction), no scratch accumulator, and the
+same epilogue. Selected automatically (``small_m=None``); both fp and int8
+weights take it. Result is bit-identical to the general path for shapes
+whose K fits one tile (same single-dot accumulation order).
 """
 
 from __future__ import annotations
@@ -36,15 +55,23 @@ from jax.experimental.pallas import tpu as pltpu
 
 from . import tpu_compiler_params
 from .ref import ACTIVATIONS
+from .quant import widen_in_register as _widen
+from .tiling import pad_axis, pick_tile, round_up
+
+# auto decode-path thresholds: m at or below this uses the flat grid, as
+# long as the full K depth fits comfortably in VMEM alongside one out tile
+SMALL_M_MAX = 32
+SMALL_M_K_MAX = 4096
 
 
-def _bdmm_kernel(*refs, n_k: int, activation, out_dtype, has_bias: bool):
+def _bdmm_kernel(*refs, n_k: int, activation, out_dtype, has_bias: bool,
+                 has_scale: bool):
     """One (bm, bn) output tile of one diagonal block; accumulates over K."""
-    if has_bias:
-        x_ref, w_ref, b_ref, o_ref, acc_ref = refs
-    else:
-        x_ref, w_ref, o_ref, acc_ref = refs
-        b_ref = None
+    it = iter(refs)
+    x_ref, w_ref = next(it), next(it)
+    s_ref = next(it) if has_scale else None
+    b_ref = next(it) if has_bias else None
+    o_ref, acc_ref = next(it), next(it)
     k = pl.program_id(3)
 
     @pl.when(k == 0)
@@ -52,8 +79,9 @@ def _bdmm_kernel(*refs, n_k: int, activation, out_dtype, has_bias: bool):
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
     # x tile: (bm, 1, bk) ; w tile: (1, bk, bn)
+    x = x_ref[:, 0, :]
     acc_ref[...] += jax.lax.dot_general(
-        x_ref[:, 0, :], w_ref[0],
+        x, _widen(w_ref[0], x),
         dimension_numbers=(((1,), (0,)), ((), ())),
         preferred_element_type=jnp.float32,
     )
@@ -61,20 +89,47 @@ def _bdmm_kernel(*refs, n_k: int, activation, out_dtype, has_bias: bool):
     @pl.when(k == n_k - 1)
     def _epilogue():
         acc = acc_ref[...]
+        if s_ref is not None:
+            acc = acc * s_ref[0].astype(jnp.float32)
         if b_ref is not None:
             acc = acc + b_ref[0].astype(jnp.float32)
         acc = ACTIVATIONS[activation](acc)
         o_ref[...] = acc.astype(out_dtype)[:, None, :]
 
 
+def _bdmm_decode_kernel(*refs, activation, out_dtype, has_bias: bool,
+                        has_scale: bool):
+    """Weight-stationary small-m step: one (m_pad, bn) out tile per grid
+    cell, full K resident — no K loop, no scratch accumulator."""
+    it = iter(refs)
+    x_ref, w_ref = next(it), next(it)
+    s_ref = next(it) if has_scale else None
+    b_ref = next(it) if has_bias else None
+    o_ref = next(it)
+
+    x = x_ref[:, 0, :]
+    acc = jax.lax.dot_general(
+        x, _widen(w_ref[0], x),
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    if s_ref is not None:
+        acc = acc * s_ref[0].astype(jnp.float32)
+    if b_ref is not None:
+        acc = acc + b_ref[0].astype(jnp.float32)
+    o_ref[...] = ACTIVATIONS[activation](acc).astype(out_dtype)[:, None, :]
+
+
 @functools.partial(
     jax.jit,
-    static_argnames=("activation", "bm", "bn", "bk", "interpret", "out_dtype"),
+    static_argnames=("activation", "bm", "bn", "bk", "interpret", "out_dtype",
+                     "small_m"),
 )
 def bdmm(
     x: jax.Array,
     wp: jax.Array,
     bias: Optional[jax.Array] = None,
+    scale: Optional[jax.Array] = None,
     *,
     activation: Optional[str] = None,
     bm: int = 128,
@@ -82,58 +137,93 @@ def bdmm(
     bk: int = 512,
     interpret: bool = False,
     out_dtype=None,
+    small_m: Optional[bool] = None,
 ) -> jax.Array:
     """Block-diagonal matmul ``(..., nb*bi) x (nb, bi, bo) -> (..., nb*bo)``.
 
-    ``bias`` (if given) is packed ``(nb*bo,)``. Tile sizes are clamped to the
-    actual dims, so small/smoke shapes work unchanged (at reduced efficiency).
+    ``bias`` (if given) is packed ``(nb*bo,)``. An int8 ``wp`` requires
+    ``scale: (nb, bo)`` (per-output-channel dequant, applied in the
+    epilogue). Tile sizes clamp to the actual dims and awkward remainders
+    are padded to the next tile multiple, so small/smoke shapes work
+    unchanged. ``small_m`` forces (True) / forbids (False) the
+    decode-shaped weight-stationary path; ``None`` selects it automatically
+    for small row counts.
     """
     nb, bi, bo = wp.shape
     lead = x.shape[:-1]
     assert x.shape[-1] == nb * bi, (x.shape, wp.shape)
+    if jnp.issubdtype(wp.dtype, jnp.integer):
+        assert scale is not None, "int8 wp needs a (nb, bo) scale operand"
+    if scale is not None:
+        assert scale.shape == (nb, bo), (scale.shape, wp.shape)
     m = 1
     for d in lead:
         m *= d
     x2 = x.reshape(m, nb, bi)
-
-    bm_, bn_, bk_ = min(bm, m), min(bn, bo), min(bk, bi)
-    # grid must tile exactly; fall back to full-dim tiles on awkward remainders
-    if m % bm_:
-        bm_ = next(t for t in range(bm_, 0, -1) if m % t == 0)
-    if bo % bn_:
-        bn_ = next(t for t in range(bn_, 0, -1) if bo % t == 0)
-    if bi % bk_:
-        bk_ = next(t for t in range(bk_, 0, -1) if bi % t == 0)
-    n_k = bi // bk_
-    grid = (m // bm_, nb, bo // bn_, n_k)
-
     out_dtype = out_dtype or x.dtype
-    has_bias = bias is not None
-    kernel = functools.partial(
-        _bdmm_kernel, n_k=n_k, activation=activation, out_dtype=out_dtype,
-        has_bias=has_bias,
-    )
+
+    if small_m is None:
+        small_m = m <= SMALL_M_MAX and bi <= SMALL_M_K_MAX
+
+    m_unit = 8 if jnp.dtype(x.dtype).itemsize >= 4 else 16
+    if small_m:
+        # weight-stationary flat grid: full K per step, m padded to sublane
+        m_p = round_up(m, m_unit)
+        bn_, bo_p = pick_tile(bo, bn, name="bo", kernel="bdmm")
+        bm_, bk_, bi_p, n_k = m_p, bi, bi, 1
+        grid = (nb, bo_p // bn_)
+        x_idx = lambda n, j: (0, n, 0)
+        w_idx = lambda n, j: (n, 0, j)
+        v_idx = lambda n, j: (n, j)
+        o_idx = lambda n, j: (0, n, j)
+        kernel_fn, dims = _bdmm_decode_kernel, ("parallel", "parallel")
+    else:
+        bm_, m_p = pick_tile(m, bm, name="m", kernel="bdmm")
+        bn_, bo_p = pick_tile(bo, bn, name="bo", kernel="bdmm")
+        bk_, bi_p = pick_tile(bi, bk, name="bi", kernel="bdmm")
+        n_k = bi_p // bk_
+        grid = (m_p // bm_, nb, bo_p // bn_, n_k)
+        x_idx = lambda i, n, j, k: (i, n, k)
+        w_idx = lambda i, n, j, k: (n, k, j)
+        v_idx = lambda i, n, j, k: (n, j)
+        o_idx = lambda i, n, j, k: (i, n, j)
+        kernel_fn = _bdmm_kernel
+        dims = ("parallel", "parallel", "parallel", "arbitrary")
+
+    # zero-padding is exact: padded K rows/cols contribute nothing, padded
+    # m/bo rows are sliced off below
+    x2 = pad_axis(pad_axis(x2, 0, m_p), 2, bi_p)
+    wp = pad_axis(pad_axis(wp, 1, bi_p), 2, bo_p)
+
+    has_bias, has_scale = bias is not None, scale is not None
+    kw = dict(activation=activation, out_dtype=out_dtype, has_bias=has_bias,
+              has_scale=has_scale)
+    if not small_m:
+        kw["n_k"] = n_k
+    kernel = functools.partial(kernel_fn, **kw)
 
     in_specs = [
-        pl.BlockSpec((bm_, 1, bk_), lambda i, n, j, k: (i, n, k)),
-        pl.BlockSpec((1, bk_, bn_), lambda i, n, j, k: (n, k, j)),
+        pl.BlockSpec((bm_, 1, bk_), x_idx),
+        pl.BlockSpec((1, bk_, bn_), w_idx),
     ]
     args = [x2, wp]
+    if has_scale:
+        in_specs.append(pl.BlockSpec((1, bn_), v_idx))
+        args.append(pad_axis(scale, 1, bo_p))
     if has_bias:
         assert bias.shape == (nb * bo,)
-        in_specs.append(pl.BlockSpec((1, bn_), lambda i, n, j, k: (n, j)))
-        args.append(bias.reshape(nb, bo))
+        in_specs.append(pl.BlockSpec((1, bn_), v_idx))
+        args.append(pad_axis(bias.reshape(nb, bo), 1, bo_p))
 
     y = pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=in_specs,
-        out_specs=pl.BlockSpec((bm_, 1, bn_), lambda i, n, j, k: (i, n, j)),
-        out_shape=jax.ShapeDtypeStruct((m, nb, bo), out_dtype),
-        scratch_shapes=[pltpu.VMEM((bm_, bn_), jnp.float32)],
-        compiler_params=tpu_compiler_params(
-            dimension_semantics=("parallel", "parallel", "parallel", "arbitrary"),
-        ),
+        out_specs=pl.BlockSpec((bm_, 1, bn_), o_idx),
+        out_shape=jax.ShapeDtypeStruct((m_p, nb, bo_p), out_dtype),
+        scratch_shapes=([] if small_m
+                        else [pltpu.VMEM((bm_, bn_), jnp.float32)]),
+        compiler_params=tpu_compiler_params(dimension_semantics=dims),
         interpret=interpret,
     )(*args)
-    return y.reshape(*lead, nb * bo)
+    return y[:m, :, :bo].reshape(*lead, nb * bo)

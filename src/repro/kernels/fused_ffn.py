@@ -14,6 +14,14 @@ back from HBM twice. Here one grid step computes the whole pipeline for one
 ``(m_tile, block, f_tile)`` cell with the hidden slice held in VMEM: a
 single dispatch, and the hidden never touches HBM.
 
+Quantized weights: all three projections may be int8
+(:mod:`repro.kernels.quant`) with per-output-channel scales riding in as
+extra operands — ``s_up``/``s_gate: (nb, f)`` rescale the hidden slice
+in-register right after its dot (the hidden epilogue needs true-scale
+values), while ``s_down: (nb, bo)`` commutes with the f-accumulation and is
+applied once in the epilogue against the f32 accumulator. Weight tiles
+stream from HBM at 1 byte/element.
+
 TPU mapping
 -----------
 Grid ``(m_tiles, nb, f_tiles)`` with the f (hidden) axis innermost
@@ -24,7 +32,11 @@ the last f step. Working set per step (bm=128, bf=512, bi=bo=256, f32):
     x (bm·bi) + Wu,Wg (bi·bf ×2) + Wd (bf·bo) + h (bm·bf) + acc (bm·bo)
     ≈ 128KB + 512KB×3 + 256KB + 128KB ≈ 2 MB
 
-— comfortably inside ~16 MB VMEM with double-buffering headroom.
+— comfortably inside ~16 MB VMEM with double-buffering headroom. Awkward
+(prime/odd) ``m``/``f`` dims are padded to the next tile multiple instead
+of degrading the tile search (zero f-channels are exact: their ``w_down``
+rows are zero, so whatever the hidden epilogue produces there contributes
+nothing).
 """
 
 from __future__ import annotations
@@ -39,23 +51,22 @@ from jax.experimental.pallas import tpu as pltpu
 
 from . import tpu_compiler_params
 from .ref import ACTIVATIONS
-
-
-def _pick_tile(dim: int, want: int) -> int:
-    t = min(want, dim)
-    if dim % t:  # grid must tile exactly; fall back on awkward remainders
-        t = next(s for s in range(t, 0, -1) if dim % s == 0)
-    return t
+from .quant import widen_in_register as _widen
+from .tiling import pad_axis, pick_tile
 
 
 def _ffn_kernel(*refs, n_f: int, activation, out_dtype, gated: bool,
-                has_b_up: bool, has_b_gate: bool, has_b_down: bool):
+                has_scale: bool, has_b_up: bool, has_b_gate: bool,
+                has_b_down: bool):
     """One (bm, block, bf) cell: hidden slice in VMEM, fused epilogues."""
     it = iter(refs)
     x_ref = next(it)
     wu_ref = next(it)
     wg_ref = next(it) if gated else None
     wd_ref = next(it)
+    su_ref = next(it) if has_scale else None
+    sg_ref = next(it) if has_scale and gated else None
+    sd_ref = next(it) if has_scale else None
     bu_ref = next(it) if has_b_up else None
     bg_ref = next(it) if has_b_gate else None
     bd_ref = next(it) if has_b_down else None
@@ -68,16 +79,20 @@ def _ffn_kernel(*refs, n_f: int, activation, out_dtype, gated: bool,
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
     x = x_ref[:, 0, :]  # (bm, bi)
-    u = jax.lax.dot_general(x, wu_ref[0], (((1,), (0,)), ((), ())),
-                            preferred_element_type=jnp.float32)
-    if bu_ref is not None:
-        u = u + bu_ref[0].astype(jnp.float32)
-    if gated:
-        g = jax.lax.dot_general(x, wg_ref[0], (((1,), (0,)), ((), ())),
+
+    def proj(w_ref, s_ref, b_ref):
+        z = jax.lax.dot_general(x, _widen(w_ref[0], x),
+                                (((1,), (0,)), ((), ())),
                                 preferred_element_type=jnp.float32)
-        if bg_ref is not None:
-            g = g + bg_ref[0].astype(jnp.float32)
-        h = ACTIVATIONS[activation](g) * u
+        if s_ref is not None:
+            z = z * s_ref[0].astype(jnp.float32)
+        if b_ref is not None:
+            z = z + b_ref[0].astype(jnp.float32)
+        return z
+
+    u = proj(wu_ref, su_ref, bu_ref)
+    if gated:
+        h = ACTIVATIONS[activation](proj(wg_ref, sg_ref, bg_ref)) * u
     else:
         h = ACTIVATIONS[activation](u)
 
@@ -89,6 +104,8 @@ def _ffn_kernel(*refs, n_f: int, activation, out_dtype, gated: bool,
     @pl.when(fi == n_f - 1)
     def _epilogue():
         out = acc_ref[...]
+        if sd_ref is not None:
+            out = out * sd_ref[0].astype(jnp.float32)
         if bd_ref is not None:
             out = out + bd_ref[0].astype(jnp.float32)
         o_ref[...] = out.astype(out_dtype)[:, None, :]
@@ -106,6 +123,9 @@ def fused_ffn(
     b_up: Optional[jax.Array] = None,
     b_gate: Optional[jax.Array] = None,
     b_down: Optional[jax.Array] = None,
+    s_up: Optional[jax.Array] = None,
+    s_gate: Optional[jax.Array] = None,
+    s_down: Optional[jax.Array] = None,
     *,
     activation: Optional[str] = "silu",
     bm: int = 128,
@@ -117,12 +137,31 @@ def fused_ffn(
 
     ``w_up/w_gate: (nb, bi, f)``; ``w_down: (nb, f, bo)``; biases packed
     (``(nb*f,)`` up/gate, ``(nb*bo,)`` down). Gated when ``w_gate`` is given
-    (``h = act(gate) * up``), plain ``h = act(up)`` otherwise. Tile sizes
-    clamp to the actual dims, so smoke shapes work unchanged.
+    (``h = act(gate) * up``), plain ``h = act(up)`` otherwise. Int8 weights
+    require their scales (``s_up/s_gate: (nb, f)``, ``s_down: (nb, bo)``).
+    Tile sizes clamp to the actual dims and awkward remainders are padded,
+    so smoke shapes work unchanged.
     """
     nb, bi, f = w_up.shape
     nb_d, f_d, bo = w_down.shape
     assert (nb_d, f_d) == (nb, f), (w_up.shape, w_down.shape)
+    if w_gate is None:
+        # a gate bias/scale without a gate projection is a caller bug — the
+        # kernel would silently stream an operand it never reads
+        if b_gate is not None:
+            raise ValueError("fused_ffn: b_gate given but w_gate is None")
+        if s_gate is not None:
+            raise ValueError("fused_ffn: s_gate given but w_gate is None")
+    quant = jnp.issubdtype(w_up.dtype, jnp.integer)
+    if quant:
+        if s_up is None or s_down is None or (w_gate is not None
+                                              and s_gate is None):
+            raise ValueError("fused_ffn: int8 weights need s_up/s_down "
+                             "(and s_gate when gated)")
+        assert s_up.shape == (nb, f), (s_up.shape, w_up.shape)
+        assert s_down.shape == (nb, bo), (s_down.shape, w_down.shape)
+    elif s_up is not None or s_down is not None:
+        raise ValueError("fused_ffn: scales passed with fp weights")
     lead = x.shape[:-1]
     assert x.shape[-1] == nb * bi, (x.shape, w_up.shape)
     m = 1
@@ -130,16 +169,23 @@ def fused_ffn(
         m *= d
     x2 = x.reshape(m, nb, bi)
 
-    bm_, bf_ = _pick_tile(m, bm), _pick_tile(f, bf)
-    n_f = f // bf_
-    grid = (m // bm_, nb, n_f)
+    bm_, m_p = pick_tile(m, bm, name="m", kernel="fused_ffn")
+    bf_, f_p = pick_tile(f, bf, name="f", kernel="fused_ffn")
+    n_f = f_p // bf_
+    grid = (m_p // bm_, nb, n_f)
     out_dtype = out_dtype or x.dtype
     gated_ = w_gate is not None
 
+    # pad m rows (sliced off below) and f channels (exact: padded w_down
+    # rows are zero, so padded hidden channels contribute nothing)
+    x2 = pad_axis(x2, 0, m_p)
+    w_up = pad_axis(w_up, 2, f_p)
+    w_down = pad_axis(w_down, 1, f_p)
+
     kernel = functools.partial(
         _ffn_kernel, n_f=n_f, activation=activation, out_dtype=out_dtype,
-        gated=gated_, has_b_up=b_up is not None, has_b_gate=b_gate is not None,
-        has_b_down=b_down is not None,
+        gated=gated_, has_scale=bool(quant), has_b_up=b_up is not None,
+        has_b_gate=b_gate is not None, has_b_down=b_down is not None,
     )
 
     in_specs = [
@@ -148,16 +194,22 @@ def fused_ffn(
     ]
     args = [x2, w_up]
     if gated_:
-        assert w_gate.shape == w_up.shape, (w_gate.shape, w_up.shape)
+        assert w_gate.shape == (nb, bi, f), (w_gate.shape, (nb, bi, f))
         in_specs.append(pl.BlockSpec((1, bi, bf_), lambda i, n, fi: (n, 0, fi)))
-        args.append(w_gate)
+        args.append(pad_axis(w_gate, 2, f_p))
     in_specs.append(pl.BlockSpec((1, bf_, bo), lambda i, n, fi: (n, fi, 0)))
     args.append(w_down)
-    for b, width in ((b_up, f), (b_gate, f)):
+    if quant:
+        for s in ([s_up, s_gate] if gated_ else [s_up]):
+            in_specs.append(pl.BlockSpec((1, bf_), lambda i, n, fi: (n, fi)))
+            args.append(pad_axis(s, 1, f_p))
+        in_specs.append(pl.BlockSpec((1, bo), lambda i, n, fi: (n, 0)))
+        args.append(s_down)
+    for b in (b_up, b_gate):
         if b is not None:
             assert b.shape == (nb * f,), (b.shape, nb, f)
             in_specs.append(pl.BlockSpec((1, bf_), lambda i, n, fi: (n, fi)))
-            args.append(b.reshape(nb, width))
+            args.append(pad_axis(b.reshape(nb, f), 1, f_p))
     if b_down is not None:
         assert b_down.shape == (nb * bo,), (b_down.shape, nb, bo)
         in_specs.append(pl.BlockSpec((1, bo), lambda i, n, fi: (n, 0)))
@@ -168,11 +220,11 @@ def fused_ffn(
         grid=grid,
         in_specs=in_specs,
         out_specs=pl.BlockSpec((bm_, 1, bo), lambda i, n, fi: (i, n, 0)),
-        out_shape=jax.ShapeDtypeStruct((m, nb, bo), out_dtype),
+        out_shape=jax.ShapeDtypeStruct((m_p, nb, bo), out_dtype),
         scratch_shapes=[pltpu.VMEM((bm_, bo), jnp.float32)],
         compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,
     )(*args)
-    return y.reshape(*lead, nb * bo)
+    return y[:m].reshape(*lead, nb * bo)

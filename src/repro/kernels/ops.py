@@ -29,6 +29,11 @@ no-op there.
 
 The masked-dense training invariant (off-mask grads are exact zeros) holds
 by construction on every route.
+
+``bdmm_quant``/``fused_ffn_quant`` are the int8-weight serving forms
+(deployment artifacts from :mod:`repro.kernels.quant`): same routing, same
+epilogues, per-output-channel scales dequantized in-register — but
+inference-only, so they carry no custom VJP.
 """
 
 from __future__ import annotations
@@ -123,6 +128,26 @@ def bdmm(x, wp, bias=None, *, activation: Optional[str] = None, precision=None):
     epilogue on the Pallas routes and fuse under XLA on the jnp route.
     """
     return _bdmm(x, wp, bias, activation, precision)
+
+
+def bdmm_quant(x, wq, scale, bias=None, *, activation: Optional[str] = None,
+               precision=None, small_m: Optional[bool] = None):
+    """Int8-weight fused block-diagonal matmul
+    ``(..., nb*bi) -> act((x @ blockdiag(dequant(wq))) + bias)``.
+
+    ``wq: (nb, bi, bo)`` int8 with per-output-channel ``scale: (nb, bo)``
+    (:func:`repro.kernels.quant.quantize_blocks`). Inference-only — no
+    custom VJP: quantized weights are a deployment artifact, never trained
+    through. The Pallas routes stream int8 weight tiles and dequantize
+    in-register against the f32 accumulator; ``precision`` selects the jnp
+    einsum precision only.
+    """
+    if _BACKEND == "jnp":
+        return ref.bdmm_quant_ref(x, wq, scale, bias, activation=activation,
+                                  precision=precision)
+    return bdmm_kernel.bdmm(x, wq, bias, scale, activation=activation,
+                            interpret=(_BACKEND == "interpret"),
+                            small_m=small_m)
 
 
 # --------------------------------------------------------------------------
@@ -278,5 +303,31 @@ def fused_ffn(x, w_up, w_down, *, w_gate=None, b_up=None, b_gate=None,
     ``w_down (nb, f, bo)``; biases packed. The ``(tokens, nb*f)`` hidden
     lives only in VMEM on the Pallas routes.
     """
+    if w_gate is None and b_gate is not None:
+        raise ValueError("fused_ffn: b_gate given but w_gate is None — the "
+                         "non-gated form has no gate bias to apply")
     return _fused_ffn(x, w_up, w_gate, w_down, b_up, b_gate, b_down,
                       activation, precision)
+
+
+def fused_ffn_quant(x, w_up, w_down, *, s_up, s_down, w_gate=None,
+                    s_gate=None, b_up=None, b_gate=None, b_down=None,
+                    activation: Optional[str] = "silu", precision=None):
+    """Int8-weight fused block-diagonal MLP (one dispatch on the Pallas
+    routes). Weights int8 ``(nb, bi, f)`` / ``(nb, f, bo)`` with
+    per-output-channel scales ``s_up/s_gate: (nb, f)``,
+    ``s_down: (nb, bo)``; biases in true (dequantized) scale. Inference-only
+    — no custom VJP.
+    """
+    if w_gate is None and (b_gate is not None or s_gate is not None):
+        raise ValueError("fused_ffn_quant: gate bias/scale given but w_gate "
+                         "is None")
+    if _BACKEND == "jnp":
+        return ref.fused_ffn_quant_ref(
+            x, w_up, w_down, w_gate=w_gate, b_up=b_up, b_gate=b_gate,
+            b_down=b_down, s_up=s_up, s_gate=s_gate, s_down=s_down,
+            activation=activation, precision=precision)
+    return ffn_kernel.fused_ffn(
+        x, w_up, w_down, w_gate=w_gate, b_up=b_up, b_gate=b_gate,
+        b_down=b_down, s_up=s_up, s_gate=s_gate, s_down=s_down,
+        activation=activation, interpret=(_BACKEND == "interpret"))

@@ -1,0 +1,122 @@
+"""Symmetric per-output-channel quantization of packed block tensors.
+
+The paper's headline compression numbers come from *pruning and
+quantization together*; the permuted-block structure is exactly what makes
+low-bit storage hardware-friendly (PERMDNN, Tight Compression): every
+packed block ``wp[n]`` is dense and MXU-aligned, so one scale vector per
+``(block, output-channel)`` pair falls out naturally — no sparse index
+metadata, no ragged groups.
+
+Layout
+------
+For a packed weight ``wp: (..., nb, bi, bo)`` (arbitrary stacked leading
+axes — periods, experts):
+
+* ``q``     — same shape, ``int8``, values in ``[-qmax, qmax]``;
+* ``scale`` — ``(..., nb, bo)`` float32, ``scale[n, o] = amax[n, o]/qmax``
+  where ``amax`` reduces over the block-input axis.  Dequantization is
+  ``q.astype(f32) * scale[..., None, :]`` — a per-column rescale that
+  commutes with the K-accumulation, so the kernels apply it once in the
+  epilogue against the f32 accumulator instead of widening weight tiles in
+  HBM.
+
+``bits=8`` (``qmax=127``) is the execution format. ``bits=4``
+(``qmax=7``) is a *storage* variant: :func:`pack_int4` nibble-packs pairs
+of block-input rows into one byte for checkpoints; the runtime unpacks to
+int8 at deploy time (:func:`unpack_int4`) and streams int8 tiles — the
+kernels never see nibbles.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+QMAX = {8: 127, 4: 7}
+BITS = {"int8": 8, "int4": 4}
+
+
+def quantize_blocks(wp, bits: int = 8) -> Tuple[jax.Array, jax.Array]:
+    """Symmetric per-output-channel quantization of packed blocks.
+
+    ``wp: (..., nb, bi, bo)`` -> ``(q int8 same-shape, scale f32 (..., nb, bo))``.
+    All-zero columns get ``scale=1`` (and quantize to exact zeros), so the
+    dequantized form is always finite.
+    """
+    qmax = QMAX[bits]
+    w = jnp.asarray(wp, jnp.float32)
+    amax = jnp.max(jnp.abs(w), axis=-2)                      # (..., nb, bo)
+    scale = jnp.where(amax > 0, amax / qmax, 1.0).astype(jnp.float32)
+    q = jnp.clip(jnp.round(w / scale[..., None, :]), -qmax, qmax)
+    return q.astype(jnp.int8), scale
+
+
+def dequantize_blocks(q, scale) -> jax.Array:
+    """Inverse of :func:`quantize_blocks` (up to rounding): f32 blocks."""
+    return q.astype(jnp.float32) * scale[..., None, :]
+
+
+def quant_error(wp, q, scale) -> Dict[str, float]:
+    """Round-trip error statistics for one quantized leaf (concrete arrays).
+
+    ``max_abs`` is elementwise-bounded by ``scale/2`` per column (symmetric
+    round-to-nearest); ``rel_rms`` is ``||w - dq|| / ||w||``.
+    """
+    w = np.asarray(wp, np.float32)
+    dq = np.asarray(dequantize_blocks(q, scale), np.float32)
+    err = w - dq
+    denom = float(np.sqrt((w ** 2).sum())) + 1e-30
+    return {
+        "max_abs": float(np.abs(err).max()),
+        "rel_rms": float(np.sqrt((err ** 2).sum())) / denom,
+    }
+
+
+# --------------------------------------------------------------------------
+# int4 nibble packing (storage only)
+# --------------------------------------------------------------------------
+
+def pack_int4(q) -> jax.Array:
+    """Nibble-pack an int4-valued int8 tensor along the block-input axis.
+
+    ``q: (..., bi, bo)`` with values in ``[-8, 7]`` ->
+    ``(..., ceil(bi/2), bo)`` uint8, row ``2k`` in the low nibble and row
+    ``2k+1`` in the high nibble. Odd ``bi`` is zero-padded (the consumer
+    slices back with :func:`unpack_int4`).
+    """
+    bi = q.shape[-2]
+    if bi % 2:
+        pad = [(0, 0)] * (q.ndim - 2) + [(0, 1), (0, 0)]
+        q = jnp.pad(q, pad)
+    lo = q[..., 0::2, :].astype(jnp.uint8) & 0x0F
+    hi = q[..., 1::2, :].astype(jnp.uint8) & 0x0F
+    return lo | (hi << 4)
+
+
+def unpack_int4(packed, bi: int) -> jax.Array:
+    """Inverse of :func:`pack_int4`: ``(..., ceil(bi/2), bo)`` uint8 ->
+    ``(..., bi, bo)`` int8 (sign-extended nibbles)."""
+    b = jax.lax.bitcast_convert_type(packed.astype(jnp.uint8), jnp.int8)
+    lo = jnp.right_shift(jax.lax.bitcast_convert_type(
+        jnp.left_shift(packed.astype(jnp.uint8), 4), jnp.int8), 4)
+    hi = jnp.right_shift(b, 4)
+    inter = jnp.stack([lo, hi], axis=-2)                 # (..., k, 2, bo)
+    flat = inter.reshape(*packed.shape[:-2], 2 * packed.shape[-2],
+                         packed.shape[-1])
+    return flat[..., :bi, :]
+
+
+def widen_in_register(w, like):
+    """In-register dequant-cast for kernel weight tiles: int8 widens to the
+    activation dtype (int8 values are exact in bf16 and f32); fp tiles pass
+    through unchanged."""
+    return w.astype(like.dtype) if jnp.issubdtype(w.dtype, jnp.integer) else w
+
+
+def is_quantized(leaf) -> bool:
+    """True for a param leaf produced by the quantize pass
+    (``{"w_q", "w_scale", ...}`` instead of ``{"w", ...}``)."""
+    return isinstance(leaf, dict) and "w_q" in leaf

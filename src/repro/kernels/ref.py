@@ -78,6 +78,29 @@ def matmul_masked_grad_ref(x, g, mask, precision=None):
     return jnp.einsum("...i,...o->io", x, g, precision=precision) * mask
 
 
+def bdmm_quant_ref(x, wq, scale, bias=None, activation: Optional[str] = None,
+                   precision=None):
+    """Int8-weight block-diagonal matmul oracle, mirroring the kernel's
+    computation order: raw int-product accumulation in f32, then one
+    per-output-channel ``* scale`` rescale in the epilogue, then bias and
+    activation.
+
+    ``wq: (nb, bi, bo)`` int8; ``scale: (nb, bo)`` f32 (from
+    :func:`repro.kernels.quant.quantize_blocks`).
+    """
+    nb, bi, bo = wq.shape
+    lead = x.shape[:-1]
+    xb = x.reshape(*lead, nb, bi)
+    y = jnp.einsum("...nk,nko->...no", xb, wq.astype(x.dtype),
+                   precision=precision,
+                   preferred_element_type=jnp.float32)
+    y = y * scale
+    if bias is not None:
+        y = y + bias.reshape(nb, bo)
+    y = ACTIVATIONS[activation](y).astype(x.dtype)
+    return y.reshape(*lead, nb * bo)
+
+
 def fused_ffn_ref(x, w_up, w_down, w_gate=None, b_up=None, b_gate=None,
                   b_down=None, activation: Optional[str] = "silu",
                   precision=None):
@@ -89,6 +112,8 @@ def fused_ffn_ref(x, w_up, w_down, w_gate=None, b_up=None, b_gate=None,
     ``w_gate`` is given: ``h = act(x@Wg + bg) * (x@Wu + bu)``; otherwise
     ``h = act(x@Wu + bu)``. Returns ``act_down-free`` ``h @ Wd + bd``.
     """
+    if w_gate is None and b_gate is not None:
+        raise ValueError("fused_ffn_ref: b_gate given but w_gate is None")
     u = bdmm_ref(x, w_up, b_up, precision=precision)
     if w_gate is not None:
         g = bdmm_ref(x, w_gate, b_gate, precision=precision)
@@ -96,3 +121,21 @@ def fused_ffn_ref(x, w_up, w_down, w_gate=None, b_up=None, b_gate=None,
     else:
         h = ACTIVATIONS[activation](u)
     return bdmm_ref(h, w_down, b_down, precision=precision)
+
+
+def fused_ffn_quant_ref(x, w_up, w_down, w_gate=None, b_up=None, b_gate=None,
+                        b_down=None, s_up=None, s_gate=None, s_down=None,
+                        activation: Optional[str] = "silu", precision=None):
+    """Int8-weight fused-MLP oracle: each projection is a
+    :func:`bdmm_quant_ref` (scale applied right after its dot, before bias
+    and the hidden epilogue), mirroring the kernel's in-register dequant."""
+    if w_gate is None and (b_gate is not None or s_gate is not None):
+        raise ValueError(
+            "fused_ffn_quant_ref: gate bias/scale given but w_gate is None")
+    u = bdmm_quant_ref(x, w_up, s_up, b_up, precision=precision)
+    if w_gate is not None:
+        g = bdmm_quant_ref(x, w_gate, s_gate, b_gate, precision=precision)
+        h = gated(activation)(g, u)
+    else:
+        h = ACTIVATIONS[activation](u)
+    return bdmm_quant_ref(h, w_down, s_down, b_down, precision=precision)

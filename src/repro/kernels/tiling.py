@@ -1,0 +1,62 @@
+"""Grid-tiling policy shared by the Pallas kernels.
+
+The kernels require every grid axis to tile its dim exactly. The old
+fallback walked divisors down to 1, so a prime or odd dim silently degraded
+to tile size 1 — a correct but catastrophically serial grid. The policy
+here instead *pads the operand* to the next tile multiple (zero rows/cols
+are exact: they contribute nothing to a matmul and are sliced off the
+output), and only accepts an exact divisor when it stays at or above the
+sublane width.
+"""
+
+from __future__ import annotations
+
+import warnings
+
+SUBLANE = 8  # f32 sublane width; bf16/int8 want more, but 8 is the floor
+
+
+def round_up(n: int, m: int) -> int:
+    return -(-n // m) * m
+
+
+def pad_axis(a, axis: int, to: int):
+    """Zero-pad one axis of ``a`` up to length ``to`` (no-op when equal)."""
+    if a.shape[axis] == to:
+        return a
+    import jax.numpy as jnp
+    pad = [(0, 0)] * a.ndim
+    pad[axis] = (0, to - a.shape[axis])
+    return jnp.pad(a, pad)
+
+
+def pick_tile(dim: int, want: int, *, unit: int = SUBLANE,
+              name: str = "dim", kernel: str = "kernel"):
+    """Choose a tile size for ``dim`` aiming at ``want``.
+
+    Returns ``(tile, padded_dim)`` with ``padded_dim % tile == 0``. Prefers
+    an exact divisor of ``dim`` no smaller than ``unit``; otherwise keeps a
+    large tile and pads ``dim`` up to the next multiple. Warns when the
+    tile lands below the sublane width (only possible when ``dim`` itself
+    is that small — the grid still works, at reduced lane utilization).
+    """
+    t = min(want, dim)
+    if dim % t:
+        t = next((s for s in range(t, unit - 1, -1) if dim % s == 0), 0)
+        if not t:  # awkward (prime/odd) dim: pad instead of degrading to 1
+            # keep the pad waste bounded: halve the tile until the padding
+            # overhead drops to ~1/8, else take the least-wasteful candidate
+            cands = []
+            s = max(min(want, round_up(dim, unit)), unit)
+            while s >= unit:
+                cands.append(s)
+                s //= 2
+            waste = lambda s: round_up(dim, s) / dim - 1.0
+            t = next((s for s in cands if waste(s) <= 0.125),
+                     min(cands, key=waste))
+    if t < unit:
+        warnings.warn(
+            f"{kernel}: {name}={dim} forces tile {t} below the sublane "
+            f"width {unit}; expect poor lane utilization on this axis",
+            stacklevel=3)
+    return t, round_up(dim, t)

@@ -139,9 +139,24 @@ def _restore_latest(ckpt_dir, params, tag=""):
     return params
 
 
+def _quantize_in_memory(model, params, mode):
+    """Post-hoc quantization of an already-packed (model, params) pair."""
+    from repro.core import export as export_lib
+    from repro.kernels.quant import BITS
+
+    params, report = export_lib.quantize_packed(model, params,
+                                                bits=BITS[mode])
+    print(f"quantized packed weights to {mode}: "
+          f"{report['n_layers']} layers, max rel-rms err "
+          f"{report['max_rel_rms']:.2e}")
+    model.quant_report = report
+    return params
+
+
 def _load_model(args):
     """Resolve (model, params) from the CLI: a packed export directory, a
-    masked_dense train checkpoint folded on the fly, or random init."""
+    masked_dense train checkpoint folded on the fly, or random init —
+    optionally quantized (``--quantize int8``)."""
     from repro.checkpoint import checkpoint as ckpt_lib
 
     over = {}
@@ -153,12 +168,21 @@ def _load_model(args):
 
     if args.ckpt_dir and ckpt_lib.has_packed(args.ckpt_dir):
         # deployment artifact written by `train --fold-to-packed` /
-        # export_packed: config + fold + perm-fusion all recorded inside
+        # export_packed: config + fold + perm-fusion + quantization all
+        # recorded inside
         if over or args.fold_to_packed:
             print("note: packed export found — its recorded config wins; "
                   "ignoring --mpd-c/--mpd-fuse/--fold-to-packed")
         model, params = ckpt_lib.load_packed(args.ckpt_dir)
-        print(f"loaded packed export from {args.ckpt_dir}/packed")
+        stored_q = getattr(model, "quant_report", None)
+        print(f"loaded packed export from {args.ckpt_dir}/packed"
+              + (f" (quantized, {stored_q['bits']}-bit)" if stored_q else ""))
+        if args.quantize and not stored_q:
+            params = _quantize_in_memory(model, params, args.quantize)
+        elif args.quantize and stored_q:
+            print(f"note: export already quantized ({stored_q['bits']}-bit) "
+                  f"— its stored form wins; ignoring --quantize "
+                  f"{args.quantize}")
         return model.cfg, model, params
 
     if args.fold_to_packed:
@@ -168,15 +192,24 @@ def _load_model(args):
         params = model_md.init(jax.random.PRNGKey(0))
         if args.ckpt_dir:
             params = _restore_latest(args.ckpt_dir, params, "masked_dense ")
-        model, params = model_md.to_packed(params, fuse=cfg.mpd_fuse)
+        model, params = model_md.to_packed(params, fuse=cfg.mpd_fuse,
+                                           quantize=args.quantize or None)
+        rep = getattr(model, "quant_report", None)
         print(f"folded to packed: {model.param_count():,} params "
-              f"(was {model_md.param_count():,})")
+              f"(was {model_md.param_count():,})"
+              + (f", quantized {args.quantize} (max rel-rms err "
+                 f"{rep['max_rel_rms']:.2e})" if rep else ""))
         return model.cfg, model, params
 
     model = build(cfg)
     params = model.init(jax.random.PRNGKey(0))
     if args.ckpt_dir:
         params = _restore_latest(args.ckpt_dir, params)
+    if args.quantize:
+        if cfg.mpd_mode != "packed":
+            raise SystemExit("--quantize needs packed params: combine with "
+                             "--fold-to-packed for a masked_dense run")
+        params = _quantize_in_memory(model, params, args.quantize)
     return cfg, model, params
 
 
@@ -205,6 +238,11 @@ def main(argv=None):
     p.add_argument("--fold-to-packed", action="store_true",
                    help="treat the checkpoint (or init) as masked_dense and "
                    "fold it to packed before serving (paper Eq. 2)")
+    p.add_argument("--quantize", choices=("int8", "int4"), default="",
+                   help="serve int8-weight packed kernels (int4 = 4-bit "
+                   "weights, nibble-packed at rest and unpacked to int8 at "
+                   "deploy; scales stay f32); a quantized packed export "
+                   "deploys its stored form automatically")
     args = p.parse_args(argv)
 
     cfg0 = get_config(args.arch, smoke=args.smoke)

@@ -36,6 +36,9 @@ def main(argv=None):
                    "a packed deployment checkpoint (<ckpt-dir>/packed); "
                    "--mpd-fuse additionally applies the Fig-3 perm-fusion "
                    "rewrite so FFNs hit the one-dispatch fused kernel")
+    p.add_argument("--quantize", choices=("", "int8", "int4"), default="",
+                   help="with --fold-to-packed: quantize the packed export "
+                   "(int8 execution; int4 = nibble-packed storage)")
     p.add_argument("--ckpt-dir", default="")
     p.add_argument("--compress-grads", action="store_true")
     p.add_argument("--data-axis", type=int, default=0,
@@ -49,6 +52,9 @@ def main(argv=None):
         over["mpd_fuse"] = True
     if args.mpd_mode:
         over["mpd_mode"] = args.mpd_mode
+    if args.quantize and not args.fold_to_packed:
+        raise SystemExit("--quantize quantizes the packed export; add "
+                         "--fold-to-packed")
     if args.fold_to_packed:
         if not args.ckpt_dir:
             raise SystemExit("--fold-to-packed needs --ckpt-dir for the "
@@ -85,10 +91,13 @@ def main(argv=None):
 
         from repro.checkpoint import checkpoint as ckpt_lib
         d = ckpt_lib.export_packed(args.ckpt_dir, args.steps, model,
-                                   out["params"], fuse=args.mpd_fuse)
+                                   out["params"], fuse=args.mpd_fuse,
+                                   quantize=args.quantize or None)
         n_pk = build(dataclasses.replace(cfg, mpd_mode="packed")).param_count()
         print(f"packed export: {d} "
-              f"({n_pk:,} params, was {model.param_count():,})")
+              f"({n_pk:,} params, was {model.param_count():,}"
+              + (f", {args.quantize}-quantized" if args.quantize else "")
+              + ")")
 
 
 if __name__ == "__main__":

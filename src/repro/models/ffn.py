@@ -122,14 +122,29 @@ class FFNSpec:
         up, gate, down = self.w_up, self.w_gate, self.w_down
         xp = fold_lib.pack_inputs(up.spec.mask, x, skip=up.spec.skip_in_perm)
         act = {"swiglu": "silu", "gelu": "gelu", "relu": "relu"}[self.kind]
-        y = ops.fused_ffn(
-            xp, params["w_up"]["w"], params["w_down"]["w"],
-            w_gate=params["w_gate"]["w"] if gate is not None else None,
+        biases = dict(
             b_up=self._packed_bias(up, params["w_up"]),
             b_gate=(self._packed_bias(gate, params["w_gate"])
                     if gate is not None else None),
-            b_down=self._packed_bias(down, params["w_down"]),
-            activation=act)
+            b_down=self._packed_bias(down, params["w_down"]))
+        from repro.kernels.quant import is_quantized
+        if is_quantized(params["w_up"]):
+            # quantized deployment artifact: all three projections carry
+            # int8 blocks + scales (the quantize pass converts them
+            # together), routed to the int8 fused kernel
+            y = ops.fused_ffn_quant(
+                xp, params["w_up"]["w_q"], params["w_down"]["w_q"],
+                s_up=params["w_up"]["w_scale"],
+                s_down=params["w_down"]["w_scale"],
+                w_gate=params["w_gate"]["w_q"] if gate is not None else None,
+                s_gate=(params["w_gate"]["w_scale"]
+                        if gate is not None else None),
+                activation=act, **biases)
+        else:
+            y = ops.fused_ffn(
+                xp, params["w_up"]["w"], params["w_down"]["w"],
+                w_gate=params["w_gate"]["w"] if gate is not None else None,
+                activation=act, **biases)
         y = fold_lib.unpack_outputs(down.spec.mask, y,
                                     skip=down.spec.skip_out_perm)
         if down.out_axis is not None and y.ndim >= 2:

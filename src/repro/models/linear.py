@@ -59,7 +59,11 @@ class Linear:
     def apply(self, params, x, *, activation=None, extra_bias=None):
         """Forward with the bias/activation epilogue fused into the kernel
         dispatch (see :func:`repro.core.mpd.apply`). Model code passes its
-        elementwise epilogues down here instead of composing them outside."""
+        elementwise epilogues down here instead of composing them outside.
+
+        Quantized packed leaves (``{"w_q", "w_scale"}`` from the
+        :mod:`repro.core.export` quantize pass) route to the int8 kernels
+        transparently — same spec, same epilogues, inference-only."""
         y = mpd.apply(self.spec, params, x, activation=activation,
                       extra_bias=extra_bias)
         if self.out_axis is not None and y.ndim >= 2:

@@ -561,15 +561,19 @@ class Model:
 
     # ------------------------------------------------------- fold / export
     def to_packed(self, params, *, fuse: bool = False,
-                  check_residual: bool = True, atol: float = 1e-6):
+                  check_residual: bool = True, atol: float = 1e-6,
+                  quantize=None):
         """Fold this trained ``masked_dense`` model into its packed
         inference twin (paper Eq. 2 applied model-wide). Returns
         ``(packed_model, packed_params)``; with ``fuse=True`` the Fig-3
-        permutation-cancellation rewrite is applied post hoc. See
-        :mod:`repro.core.export`."""
+        permutation-cancellation rewrite is applied post hoc, and with
+        ``quantize="int8"``/``"int4"`` the packed blocks are additionally
+        quantized (scales computed at fold time, round-trip error recorded
+        on ``packed_model.quant_report``). See :mod:`repro.core.export`."""
         from repro.core import export as export_lib
         return export_lib.fold_model(self, params, fuse=fuse,
-                                     check_residual=check_residual, atol=atol)
+                                     check_residual=check_residual, atol=atol,
+                                     quantize=quantize)
 
     # ------------------------------------------------------------- accounting
     def param_count(self) -> int:

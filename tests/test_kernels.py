@@ -97,6 +97,49 @@ def test_sddmm_masked(shape):
     assert np.all(np.asarray(dw) * (1 - np.asarray(mask)) == 0)
 
 
+class TestTilePadding:
+    """Awkward (prime/odd) dims must pad to the next tile multiple instead
+    of silently degrading the tile search to size 1."""
+
+    def test_pick_tile_pads_prime_dim(self):
+        from repro.kernels.tiling import pick_tile
+        tile, padded = pick_tile(131, 128)
+        assert tile >= 8 and padded % tile == 0 and padded >= 131
+
+    def test_pick_tile_exact_divisor_kept(self):
+        from repro.kernels.tiling import pick_tile
+        assert pick_tile(130, 128) == (65, 130)   # divisor >= sublane wins
+        assert pick_tile(128, 128) == (128, 128)
+
+    def test_pick_tile_warns_below_sublane(self):
+        import warnings as w
+        from repro.kernels.tiling import pick_tile
+        with w.catch_warnings(record=True) as rec:
+            w.simplefilter("always")
+            pick_tile(3, 128)
+        assert any("sublane" in str(r.message) for r in rec)
+
+    def test_bdmm_prime_m_matches_oracle(self):
+        # m=131 used to degrade to a 131-step tile-1 grid
+        x = jax.random.normal(jax.random.PRNGKey(0), (131, 2 * 13))
+        w = jax.random.normal(jax.random.PRNGKey(1), (2, 13, 29))
+        y = bdmm_kernel.bdmm(x, w, interpret=True, small_m=False)
+        assert _relerr(y, ref.bdmm_ref(x, w)) < 2e-5
+
+    def test_fused_ffn_prime_dims_match_oracle(self):
+        from repro.kernels import fused_ffn as ffn_kernel
+        m, nb, bi, f, bo = 37, 3, 16, 46, 16
+        k = jax.random.split(jax.random.PRNGKey(2), 5)
+        x = jax.random.normal(k[0], (m, nb * bi))
+        wu = jax.random.normal(k[1], (nb, bi, f))
+        wg = jax.random.normal(k[2], (nb, bi, f))
+        wd = jax.random.normal(k[3], (nb, f, bo))
+        bu = jax.random.normal(k[4], (nb * f,))
+        y = ffn_kernel.fused_ffn(x, wu, wd, wg, b_up=bu, interpret=True)
+        yr = ref.fused_ffn_ref(x, wu, wd, wg, b_up=bu)
+        assert _relerr(y, yr) < 2e-5
+
+
 class TestCustomVJP:
     """ops.* wrappers must differentiate identically to the jnp reference."""
 

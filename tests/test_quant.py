@@ -1,0 +1,316 @@
+"""Quantized packed execution path: round-trip bounds, kernel-vs-ref,
+decode-path exactness, fold-time quantization drift, checkpoint round trip,
+and serve-engine token match."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import bdmm as bdmm_kernel
+from repro.kernels import fused_ffn as ffn_kernel
+from repro.kernels import ops, quant, ref
+
+# documented drift tolerance for an int8-quantized folded model: relative
+# max logit error vs fp (README "Quantization"); random-init smoke models
+# sit well inside it (~1e-2)
+LOGIT_DRIFT_TOL = 5e-2
+
+
+def _relerr(a, b):
+    a = np.asarray(a, np.float32)
+    b = np.asarray(b, np.float32)
+    return np.max(np.abs(a - b)) / (np.max(np.abs(b)) + 1e-9)
+
+
+# --------------------------------------------------------------------------
+# quantize/dequantize module
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("bits", [8, 4])
+def test_roundtrip_error_bound_per_block(bits):
+    """Symmetric round-to-nearest: |w - dq| <= scale/2 elementwise."""
+    w = jax.random.normal(jax.random.PRNGKey(0), (4, 16, 24)) * 3.0
+    q, s = quant.quantize_blocks(w, bits=bits)
+    assert q.dtype == jnp.int8 and s.shape == (4, 24)
+    qmax = quant.QMAX[bits]
+    assert int(jnp.max(jnp.abs(q))) <= qmax
+    dq = quant.dequantize_blocks(q, s)
+    assert bool(jnp.all(jnp.abs(w - dq) <= 0.5 * s[:, None, :] + 1e-6))
+
+
+def test_quantize_stacked_leading_axes():
+    w = jax.random.normal(jax.random.PRNGKey(1), (2, 3, 4, 8, 16))
+    q, s = quant.quantize_blocks(w)
+    assert q.shape == w.shape and s.shape == (2, 3, 4, 16)
+    assert bool(jnp.all(jnp.abs(w - quant.dequantize_blocks(q, s))
+                        <= 0.5 * s[..., None, :] + 1e-6))
+
+
+def test_quantize_zero_column_safe():
+    w = jnp.zeros((2, 8, 8)).at[:, :, 0].set(0.0).at[0, :, 1].set(1.0)
+    q, s = quant.quantize_blocks(w)
+    dq = quant.dequantize_blocks(q, s)
+    assert bool(jnp.all(jnp.isfinite(dq)))
+    assert bool(jnp.all(dq[:, :, 0] == 0))
+
+
+@pytest.mark.parametrize("bi", [16, 17])  # even + odd (zero-padded nibble)
+def test_int4_pack_roundtrip(bi):
+    q = jax.random.randint(jax.random.PRNGKey(2), (3, bi, 8), -8, 8,
+                           dtype=jnp.int8)
+    packed = quant.pack_int4(q)
+    assert packed.shape == (3, (bi + 1) // 2, 8) and packed.dtype == jnp.uint8
+    assert bool(jnp.all(quant.unpack_int4(packed, bi) == q))
+
+
+# --------------------------------------------------------------------------
+# int8 kernels vs references
+# --------------------------------------------------------------------------
+
+QSHAPES = [(16, 4, 32, 24), (8, 2, 48, 64), (5, 3, 17, 9)]
+
+
+@pytest.mark.parametrize("shape", QSHAPES)
+def test_bdmm_quant_kernel_vs_ref(shape):
+    m, nb, bi, bo = shape
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(hash(shape) % 2**31), 3)
+    x = jax.random.normal(k1, (m, nb * bi))
+    w = jax.random.normal(k2, (nb, bi, bo))
+    b = jax.random.normal(k3, (nb * bo,))
+    q, s = quant.quantize_blocks(w)
+    y = bdmm_kernel.bdmm(x, q, b, s, activation="relu", interpret=True)
+    yr = ref.bdmm_quant_ref(x, q, s, b, activation="relu")
+    assert y.shape == yr.shape
+    assert _relerr(y, yr) < 2e-5
+
+
+def test_bdmm_quant_requires_scale():
+    x = jnp.ones((4, 8))
+    q = jnp.ones((2, 4, 4), jnp.int8)
+    with pytest.raises(AssertionError):
+        bdmm_kernel.bdmm(x, q, interpret=True)
+
+
+def test_bdmm_quant_close_to_fp():
+    """Dequantized execution tracks the fp kernel within the quant error."""
+    x = jax.random.normal(jax.random.PRNGKey(0), (16, 4 * 32))
+    w = jax.random.normal(jax.random.PRNGKey(1), (4, 32, 32))
+    q, s = quant.quantize_blocks(w)
+    y_fp = ref.bdmm_ref(x, w)
+    y_q = ref.bdmm_quant_ref(x, q, s)
+    # per-element error ~ bi * scale/2 worst case; random cancellation keeps
+    # it far below — assert a loose but meaningful bound
+    assert _relerr(y_q, y_fp) < 2e-2
+
+
+@pytest.mark.parametrize("gated", [True, False])
+def test_fused_ffn_quant_kernel_vs_ref(gated):
+    m, nb, bi, f, bo = 16, 2, 24, 40, 24
+    k = jax.random.split(jax.random.PRNGKey(3), 6)
+    x = jax.random.normal(k[0], (m, nb * bi))
+    wu = jax.random.normal(k[1], (nb, bi, f))
+    wg = jax.random.normal(k[2], (nb, bi, f)) if gated else None
+    wd = jax.random.normal(k[3], (nb, f, bo))
+    bu = jax.random.normal(k[4], (nb * f,))
+    bd = jax.random.normal(k[5], (nb * bo,))
+    qu, su = quant.quantize_blocks(wu)
+    qd, sd = quant.quantize_blocks(wd)
+    qg, sg = quant.quantize_blocks(wg) if gated else (None, None)
+    act = "silu" if gated else "gelu"
+    y = ffn_kernel.fused_ffn(x, qu, qd, qg, b_up=bu, b_down=bd, s_up=su,
+                             s_gate=sg, s_down=sd, activation=act,
+                             interpret=True)
+    yr = ref.fused_ffn_quant_ref(x, qu, qd, qg, b_up=bu, b_down=bd, s_up=su,
+                                 s_gate=sg, s_down=sd, activation=act)
+    assert _relerr(y, yr) < 2e-5
+
+
+def test_ops_quant_backends_agree():
+    """jnp route vs Pallas interpret route of the public quant entries."""
+    x = jax.random.normal(jax.random.PRNGKey(0), (8, 2 * 16))
+    w = jax.random.normal(jax.random.PRNGKey(1), (2, 16, 16))
+    q, s = quant.quantize_blocks(w)
+    old = ops.get_backend()
+    try:
+        ops.set_backend("jnp")
+        y_jnp = ops.bdmm_quant(x, q, s, activation="silu")
+        ops.set_backend("interpret")
+        y_int = ops.bdmm_quant(x, q, s, activation="silu")
+    finally:
+        ops.set_backend(old)
+    assert _relerr(y_int, y_jnp) < 2e-5
+
+
+# --------------------------------------------------------------------------
+# decode-shaped small-m path
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("m", [1, 3, 8])
+def test_decode_path_exact_match_fp(m):
+    nb, bi, bo = 4, 64, 48
+    x = jax.random.normal(jax.random.PRNGKey(m), (m, nb * bi))
+    w = jax.random.normal(jax.random.PRNGKey(m + 100), (nb, bi, bo))
+    b = jax.random.normal(jax.random.PRNGKey(m + 200), (nb * bo,))
+    y_gen = bdmm_kernel.bdmm(x, w, b, activation="silu", interpret=True,
+                             small_m=False)
+    y_dec = bdmm_kernel.bdmm(x, w, b, activation="silu", interpret=True,
+                             small_m=True)
+    # K fits one tile -> identical single-dot accumulation -> bit-exact
+    assert bool(jnp.all(y_gen == y_dec))
+
+
+@pytest.mark.parametrize("m", [1, 3, 8])
+def test_decode_path_exact_match_int8(m):
+    nb, bi, bo = 4, 64, 48
+    x = jax.random.normal(jax.random.PRNGKey(m), (m, nb * bi))
+    w = jax.random.normal(jax.random.PRNGKey(m + 100), (nb, bi, bo))
+    q, s = quant.quantize_blocks(w)
+    y_gen = bdmm_kernel.bdmm(x, q, None, s, interpret=True, small_m=False)
+    y_dec = bdmm_kernel.bdmm(x, q, None, s, interpret=True, small_m=True)
+    assert bool(jnp.all(y_gen == y_dec))
+
+
+def test_decode_path_auto_selected_matches_ref():
+    """small_m=None must auto-route small row counts and stay correct."""
+    x = jax.random.normal(jax.random.PRNGKey(0), (8, 4 * 32))
+    w = jax.random.normal(jax.random.PRNGKey(1), (4, 32, 32))
+    y = bdmm_kernel.bdmm(x, w, interpret=True)  # auto
+    assert _relerr(y, ref.bdmm_ref(x, w)) < 2e-5
+
+
+# --------------------------------------------------------------------------
+# fold-time quantization: drift + checkpoint round trip
+# --------------------------------------------------------------------------
+
+def _small_model():
+    from repro.models import ModelConfig, build
+    cfg = ModelConfig(name="q", n_layers=2, d_model=128, n_heads=4,
+                      n_kv_heads=4, d_ff=512, vocab=256, mpd_c=4,
+                      mpd_mode="masked_dense", mpd_fuse=True, q_chunk=64)
+    model = build(cfg)
+    return model, model.init(jax.random.PRNGKey(0))
+
+
+def test_quantized_fold_logit_drift():
+    model, params = _small_model()
+    m_fp, p_fp = model.to_packed(params, fuse=True)
+    m_q, p_q = model.to_packed(params, fuse=True, quantize="int8")
+    rep = m_q.quant_report
+    assert rep["bits"] == 8 and rep["n_layers"] > 0
+    assert rep["max_rel_rms"] < 2e-2  # per-layer weight round-trip error
+    toks = jnp.asarray(
+        np.random.default_rng(0).integers(0, 256, (2, 16)))
+    lg_fp = m_fp.logits(p_fp, toks)
+    lg_q = m_q.logits(p_q, toks)
+    rel = float(jnp.max(jnp.abs(lg_fp - lg_q))
+                / (jnp.max(jnp.abs(lg_fp)) + 1e-9))
+    assert rel < LOGIT_DRIFT_TOL
+
+
+@pytest.mark.parametrize("qmode", ["int8", "int4"])
+def test_packed_export_roundtrip_quantized(qmode, tmp_path):
+    from repro.checkpoint import checkpoint as ckpt_lib
+    model, params = _small_model()
+    ckpt_lib.export_packed(str(tmp_path), 5, model, params, fuse=True,
+                           quantize=qmode)
+    m2, p2 = ckpt_lib.load_packed(str(tmp_path))
+    m_q, p_q = model.to_packed(params, fuse=True, quantize=qmode)
+    for a, b in zip(jax.tree.leaves(p_q), jax.tree.leaves(p2)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+    assert m2.quant_report["bits"] == quant.BITS[qmode]
+    toks = jnp.asarray(np.random.default_rng(1).integers(0, 256, (2, 12)))
+    assert bool(jnp.all(m2.logits(p2, toks) == m_q.logits(p_q, toks)))
+
+
+# --------------------------------------------------------------------------
+# serve engine on quantized params
+# --------------------------------------------------------------------------
+
+def _requests(vocab, n=4, gen=8):
+    from repro.serve import Request, SamplingParams
+    rng = np.random.default_rng(0)
+    return [Request(id=i,
+                    prompt=rng.integers(0, vocab, size=int(rng.integers(6, 12))),
+                    max_new_tokens=gen,
+                    sampling=SamplingParams(temperature=0.0))
+            for i in range(n)]
+
+
+def _static_greedy(model, params, reqs, gen):
+    """Lockstep greedy decode of the same prompts (exactness oracle)."""
+    outs = {}
+    for r in reqs:
+        prompt = jnp.asarray(r.prompt, jnp.int32)[None, :]
+        caches = model.init_caches(1, prompt.shape[1] + gen + 1)
+        lg, caches = jax.jit(model.prefill)(params, prompt, caches)
+        tok = jnp.argmax(lg, -1)
+        toks = [int(tok[0])]
+        decode = jax.jit(model.decode_step)
+        for _ in range(gen - 1):
+            lg, caches = decode(params, tok, caches)
+            tok = jnp.argmax(lg, -1)
+            toks.append(int(tok[0]))
+        outs[r.id] = toks
+    return outs
+
+
+def test_serve_engine_int8_exactness_and_drift():
+    """Three-way serve-engine token-match contract for the int8 path:
+
+    1. continuous int8 serving == static int8 greedy decode (engine
+       exactness, token-for-token);
+    2. int8-packed engine == fp-packed engine running the *dequantized*
+       weights (the int8 kernels reproduce the dequantized model's greedy
+       stream exactly — near-tie flips would need an ~1e-7 logit tie);
+    3. int8 vs true-fp greedy agrees in aggregate within the documented
+       drift tolerance (greedy streams diverge permanently after one
+       near-tie flip, so this bound is statistical, not exact).
+    """
+    from repro.core import export as export_lib
+    from repro.serve import Engine
+    model, params = _small_model()
+    m_fp, p_fp = model.to_packed(params, fuse=True)
+    m_q, p_q = model.to_packed(params, fuse=True, quantize="int8")
+    gen = 8
+    reqs = _requests(m_fp.cfg.vocab, gen=gen)
+
+    out_q = Engine(m_q, p_q, n_slots=2, max_len=32).run([r for r in reqs])
+    static_q = _static_greedy(m_q, p_q, reqs, gen)
+    assert out_q == static_q  # (1) engine exactness on the quantized path
+
+    p_dq = export_lib.dequantize_packed(m_q, p_q)
+    out_dq = Engine(m_fp, p_dq, n_slots=2, max_len=32).run(
+        _requests(m_fp.cfg.vocab, gen=gen))
+    assert out_q == out_dq  # (2) int8 kernels == dequantized fp kernels
+
+    out_fp = Engine(m_fp, p_fp, n_slots=2, max_len=32).run(
+        _requests(m_fp.cfg.vocab, gen=gen))
+    total = matched = 0
+    for rid in out_fp:
+        for a, b in zip(out_fp[rid], out_q[rid]):
+            total += 1
+            matched += int(a == b)
+    assert matched / total >= 0.5, (matched, total)  # (3) aggregate drift
+
+
+# --------------------------------------------------------------------------
+# validation (satellite): gate bias without a gate projection
+# --------------------------------------------------------------------------
+
+def test_fused_ffn_bgate_without_gate_raises():
+    x = jnp.ones((4, 2 * 8))
+    wu = jnp.ones((2, 8, 16))
+    wd = jnp.ones((2, 16, 8))
+    bg = jnp.ones((2 * 16,))
+    with pytest.raises(ValueError):
+        ops.fused_ffn(x, wu, wd, b_gate=bg)
+    with pytest.raises(ValueError):
+        ffn_kernel.fused_ffn(x, wu, wd, b_gate=bg, interpret=True)
+    with pytest.raises(ValueError):
+        ref.fused_ffn_ref(x, wu, wd, b_gate=bg)
+    q, s = quant.quantize_blocks(wu)
+    qd, sd = quant.quantize_blocks(wd)
+    with pytest.raises(ValueError):
+        ops.fused_ffn_quant(x, q, qd, s_up=s, s_down=sd, s_gate=s)
