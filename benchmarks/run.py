@@ -12,6 +12,9 @@ Prints ``name,value,derived`` CSV rows. Sections:
                  serving (BENCH_fused.json)
   * quant,*    — int8 packed decode vs fp + decode-path grid + logit
                  drift (BENCH_quant.json)
+  * paged,*    — paged vs slot-dense serving: KV bytes allocated vs dense
+                 reservation, decode tok/s, prefix-reuse savings
+                 (BENCH_paged.json)
   * roofline,* — per-cell roofline terms from the dry-run sweep (if present)
 
 ``--fast`` trims step counts for CI-style runs; the full run reproduces the
@@ -30,7 +33,7 @@ def main() -> None:
     ap.add_argument("--skip-roofline", action="store_true")
     ap.add_argument("--sections", default="",
                     help="comma list: table1,fig4,fig5,speedup,kernels,"
-                         "serve,fused,quant,roofline")
+                         "serve,fused,quant,paged,roofline")
     args = ap.parse_args()
     want = set(args.sections.split(",")) if args.sections else None
 
@@ -63,6 +66,9 @@ def main() -> None:
     if on("quant"):
         from benchmarks import quant_bench
         rows += quant_bench.rows(smoke=args.fast)
+    if on("paged"):
+        from benchmarks import paged_bench
+        rows += paged_bench.rows(smoke=args.fast)
     for r in rows:
         print(r)
 

@@ -110,7 +110,7 @@ def run_static(model, params, requests, *, n_slots, max_len):
         if max(r.max_new_tokens for r in wave) == 1:
             done_t.append(now)
     makespan = max(done_t)
-    return total_tokens / makespan, float(np.mean(ttfts)), makespan
+    return total_tokens / makespan, float(np.mean(ttfts)), makespan, None
 
 
 def run_continuous(model, params, requests, *, n_slots, max_len):
@@ -130,7 +130,7 @@ def run_continuous(model, params, requests, *, n_slots, max_len):
     engine.metrics = ServeMetrics()
     s = serve_stream(engine, requests)
     makespan = max(m.t_done for m in engine.metrics.requests.values())
-    return s["total_tokens"] / makespan, s["ttft_mean_s"], makespan
+    return s["total_tokens"] / makespan, s["ttft_mean_s"], makespan, s
 
 
 def bench(*, smoke=True, seed=0, out="BENCH_serve.json", trials=3):
@@ -164,11 +164,23 @@ def bench(*, smoke=True, seed=0, out="BENCH_serve.json", trials=3):
                                      seed=seed)
                     runs.append(runner(model, params, reqs,
                                        n_slots=n_slots, max_len=max_len))
-                tok_s, ttft, makespan = sorted(runs)[len(runs) // 2]
-                result["rows"].append({
+                tok_s, ttft, makespan, summary = sorted(
+                    runs, key=lambda r: r[0])[len(runs) // 2]
+                row = {
                     "mode": mode, "mpd_c": c, "rate": rate,
                     "tok_s": round(tok_s, 2), "ttft_mean_s": round(ttft, 4),
-                    "makespan_s": round(makespan, 3)})
+                    "makespan_s": round(makespan, 3)}
+                if summary is not None:      # engine modes carry full metrics
+                    row.update({
+                        "queue_wait_p50_s": round(summary["queue_wait_p50_s"], 4),
+                        "queue_wait_p95_s": round(summary["queue_wait_p95_s"], 4),
+                        "e2e_p50_s": round(summary["e2e_p50_s"], 4),
+                        "e2e_p95_s": round(summary["e2e_p95_s"], 4),
+                        "kv_bytes_allocated_peak":
+                            summary["kv_bytes_allocated_peak"],
+                        "kv_bytes_reserved": summary["kv_bytes_reserved"],
+                    })
+                result["rows"].append(row)
     if out:
         with open(out, "w") as f:
             json.dump(result, f, indent=1)
@@ -183,6 +195,11 @@ def rows(smoke=True, out="BENCH_serve.json"):
         tag = f"{r['mode']}_c{r['mpd_c']}_rate{int(r['rate'])}"
         lines.append(f"serve,{tag}_tok_s,{r['tok_s']}")
         lines.append(f"serve,{tag}_ttft_ms,{round(r['ttft_mean_s']*1e3, 1)}")
+        if "e2e_p95_s" in r:
+            lines.append(f"serve,{tag}_queue_wait_p95_ms,"
+                         f"{round(r['queue_wait_p95_s']*1e3, 1)}")
+            lines.append(f"serve,{tag}_e2e_p95_ms,"
+                         f"{round(r['e2e_p95_s']*1e3, 1)}")
     return lines
 
 

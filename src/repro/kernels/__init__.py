@@ -5,6 +5,8 @@
 - ``masked_matmul`` : fused mask∘W matmul (paper-faithful training, Fig 2)
 - ``fused_ffn``     : block-diagonal fused MLP (perm-fused packed FFN path;
                       int8-weight variant inside)
+- ``paged_attention``: decode-step attention over the paged KV pool
+                      (scalar-prefetched block tables, online softmax)
 - ``quant``         : symmetric per-output-channel int8/int4 block
                       quantization (scales, nibble packing, error stats)
 - ``tiling``        : shared grid-tiling policy (pad, don't degrade)

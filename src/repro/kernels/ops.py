@@ -47,6 +47,7 @@ import jax.numpy as jnp
 from . import bdmm as bdmm_kernel
 from . import fused_ffn as ffn_kernel
 from . import masked_matmul as mm_kernel
+from . import paged_attention as paged_attn_kernel
 from . import ref
 
 _BACKEND = "jnp" if jax.default_backend() != "tpu" else "pallas"
@@ -331,3 +332,24 @@ def fused_ffn_quant(x, w_up, w_down, *, s_up, s_down, w_gate=None,
         x, w_up, w_down, w_gate=w_gate, b_up=b_up, b_gate=b_gate,
         b_down=b_down, s_up=s_up, s_gate=s_gate, s_down=s_down,
         activation=activation, interpret=(_BACKEND == "interpret"))
+
+
+# --------------------------------------------------------------------------
+# paged attention — decode step against the paged KV pool
+# --------------------------------------------------------------------------
+
+def paged_attention(q, k_pages, v_pages, block_tables, lengths):
+    """One decode step of attention against the paged KV pool (see
+    :mod:`repro.kernels.paged_attention` for layout). Inference-only — no
+    custom VJP: decode never differentiates.
+
+    On the jnp route the oracle is bitwise-stable against the slot-dense
+    decode path (the serve exactness contract); the Pallas routes stream
+    pages via scalar-prefetched block tables with an online-softmax combine.
+    """
+    if _BACKEND == "jnp":
+        return ref.paged_attention_ref(q, k_pages, v_pages, block_tables,
+                                       lengths)
+    return paged_attn_kernel.paged_attention(
+        q, k_pages, v_pages, block_tables, lengths,
+        interpret=(_BACKEND == "interpret"))

@@ -1,0 +1,152 @@
+"""Pallas TPU kernel: paged-attention decode step.
+
+Serving-side dual of the paper's thesis: MPDCompress molds *weights* into
+fixed-size hardware-friendly blocks; the paged KV cache applies the same
+idea to *activations*. K/V live in a global pool of ``(page_size, Kh, Dh)``
+pages and each sequence owns an ordered list of page ids (its block table).
+This kernel computes one decode step of attention for a batch of sequences
+directly against the pool — no gather materialization — by streaming each
+row's pages through VMEM and combining them with an online softmax.
+
+Layout
+------
+* ``q``            ``(B, H, Dh)``      — one query token per sequence
+* ``k_pages``      ``(n_pages, page_size, Kh, Dh)``
+* ``v_pages``      ``(n_pages, page_size, Kh, Dh)``
+* ``block_tables`` ``(B, P)`` int32    — physical page id per logical page
+* ``lengths``      ``(B,)`` int32      — valid KV depth per row (>= 1)
+
+TPU mapping
+-----------
+Grid ``(B, P)`` with the page axis innermost ("arbitrary" semantics).
+``block_tables``/``lengths`` ride as *scalar prefetch* operands
+(:class:`pltpu.PrefetchScalarGridSpec`): the page id is known before the
+kernel body runs, so the index map DMAs exactly the page the row needs —
+the block table is the only indexing metadata, mirroring how the packed
+weight kernels carry none at all. Pages past ``lengths[b]`` are skipped
+(``pl.when``); block-table entries there point at the reserved null page 0,
+so the prefetch slot is always a valid pool index.
+
+Per page the kernel runs the standard streaming-softmax update in f32
+scratch (running max ``m``, normalizer ``l``, unnormalized accumulator) and
+divides once on the last page. GQA is a static loop over KV heads with
+``g = H // Kh`` query rows per group — head counts are small and static.
+
+Numerics: the online combine is mathematically identical to a full softmax
+but not bitwise identical to the one-shot reference; the jnp route
+(:func:`repro.kernels.ref.paged_attention_ref`) IS bitwise-stable against
+the dense decode path and is what CPU serving uses. Tests compare the
+kernel (interpret mode) against the reference to ~1e-5.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from . import tpu_compiler_params
+
+NEG_INF = -1e30
+
+
+def _paged_attn_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+                       acc_ref, m_ref, l_ref, *, page_size: int, n_kv: int,
+                       n_pages_per_row: int):
+    b, p = pl.program_id(0), pl.program_id(1)
+    H, Dh = q_ref.shape[1], q_ref.shape[2]
+    g = H // n_kv
+
+    @pl.when(p == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    length = len_ref[b]
+    base = p * page_size
+
+    @pl.when(base < length)
+    def _page():
+        q = q_ref[0]                             # (H, Dh)
+        k = k_ref[0]                             # (page_size, Kh, Dh)
+        v = v_ref[0]
+        kv_pos = base + jax.lax.broadcasted_iota(jnp.int32, (1, page_size), 1)
+        valid = kv_pos < length                  # (1, page_size)
+        scale = Dh ** -0.5
+        for h in range(n_kv):
+            hs = slice(h * g, (h + 1) * g)
+            qh = q[hs]                           # (g, Dh)
+            kh = k[:, h, :]                      # (page_size, Dh)
+            vh = v[:, h, :]
+            s = jax.lax.dot_general(
+                qh, kh, dimension_numbers=(((1,), (1,)), ((), ())),
+                preferred_element_type=jnp.float32) * scale   # (g, page_size)
+            s = jnp.where(valid, s, NEG_INF)
+            m_prev = m_ref[hs, :1]               # (g, 1)
+            l_prev = l_ref[hs, :1]
+            m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+            alpha = jnp.exp(m_prev - m_new)
+            pr = jnp.exp(s - m_new)              # masked entries underflow to 0
+            l_new = alpha * l_prev + jnp.sum(pr, axis=-1, keepdims=True)
+            pv = jax.lax.dot_general(
+                pr.astype(vh.dtype), vh,
+                dimension_numbers=(((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32)           # (g, Dh)
+            acc_ref[hs, :] = acc_ref[hs, :] * alpha + pv
+            m_ref[hs, :] = jnp.broadcast_to(m_new, m_ref[hs, :].shape)
+            l_ref[hs, :] = jnp.broadcast_to(l_new, l_ref[hs, :].shape)
+
+    @pl.when(p == n_pages_per_row - 1)
+    def _final():
+        l = jnp.maximum(l_ref[:, :1], 1e-30)     # length >= 1 keeps l > 0
+        o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_attention(q, k_pages, v_pages, block_tables, lengths, *,
+                    interpret: bool = False):
+    """One decode step of paged attention: ``(B, H, Dh)`` out.
+
+    ``lengths[b]`` must be >= 1 (a live row always holds at least the token
+    just written); block-table entries past the used depth must point at a
+    valid (e.g. the null) page.
+    """
+    B, H, Dh = q.shape
+    n_pages, page_size, n_kv, _ = k_pages.shape
+    P = block_tables.shape[1]
+    assert block_tables.shape == (B, P), (block_tables.shape, B)
+    assert H % n_kv == 0, (H, n_kv)
+
+    kernel = functools.partial(
+        _paged_attn_kernel, page_size=page_size, n_kv=n_kv,
+        n_pages_per_row=P)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, P),
+        in_specs=[
+            pl.BlockSpec((1, H, Dh), lambda b, p, bt, ln: (b, 0, 0)),
+            pl.BlockSpec((1, page_size, n_kv, Dh),
+                         lambda b, p, bt, ln: (bt[b, p], 0, 0, 0)),
+            pl.BlockSpec((1, page_size, n_kv, Dh),
+                         lambda b, p, bt, ln: (bt[b, p], 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, H, Dh), lambda b, p, bt, ln: (b, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((H, Dh), jnp.float32),    # unnormalized accumulator
+            pltpu.VMEM((H, 128), jnp.float32),   # running max (lane-broadcast)
+            pltpu.VMEM((H, 128), jnp.float32),   # running normalizer
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, H, Dh), q.dtype),
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(block_tables.astype(jnp.int32), lengths.astype(jnp.int32),
+      q, k_pages, v_pages)

@@ -123,6 +123,36 @@ def fused_ffn_ref(x, w_up, w_down, w_gate=None, b_up=None, b_gate=None,
     return bdmm_ref(h, w_down, b_down, precision=precision)
 
 
+def paged_attention_ref(q, k_pages, v_pages, block_tables, lengths):
+    """Paged-attention decode oracle.
+
+    Gathers each row's pages into a contiguous KV view and runs exactly the
+    dense decode computation (same einsum contraction order, f32 softmax,
+    ``-1e30`` masking) — so on the jnp route a paged decode is bitwise
+    identical to the slot-dense decode of the same sequences: masked columns
+    exp-underflow to exact zeros, which are exact under any reduction order.
+
+    ``q: (B, H, Dh)``; ``k_pages/v_pages: (n_pages, page_size, Kh, Dh)``;
+    ``block_tables: (B, P)`` int32; ``lengths: (B,)`` valid KV depth per
+    row. Returns ``(B, H, Dh)``.
+    """
+    B, H, Dh = q.shape
+    _, page_size, n_kv, _ = k_pages.shape
+    P = block_tables.shape[1]
+    k = k_pages[block_tables].reshape(B, P * page_size, n_kv, Dh)
+    v = v_pages[block_tables].reshape(B, P * page_size, n_kv, Dh)
+    g = H // n_kv
+    q5 = q.reshape(B, 1, n_kv, g, Dh)
+    logits = jnp.einsum("bqkgd,bskd->bkgqs", q5,
+                        k.astype(q.dtype)).astype(jnp.float32)
+    logits *= Dh ** -0.5
+    valid = jnp.arange(P * page_size)[None, :] < lengths[:, None]
+    logits = jnp.where(valid[:, None, None, None, :], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", p.astype(q.dtype), v.astype(q.dtype))
+    return o.reshape(B, 1, H, Dh)[:, 0]
+
+
 def fused_ffn_quant_ref(x, w_up, w_down, w_gate=None, b_up=None, b_gate=None,
                         b_down=None, s_up=None, s_gate=None, s_down=None,
                         activation: Optional[str] = "silu", precision=None):

@@ -5,6 +5,11 @@ synthetic Poisson request stream: requests with variable prompt/output
 lengths arrive over wall-clock time, are admitted FCFS into cache slots,
 and decode as one fixed-shape batch with per-request stop conditions.
 
+``--paged`` swaps the engine's memory model to the paged KV cache (global
+page pool + block tables + prefix-reuse trie + chunked prefill; see
+``repro.serve.cache.PagedCache``) and reports page-level KV accounting
+next to the latency percentiles.
+
 ``--static`` keeps the legacy path: prefill one fixed batch, decode it in
 lockstep (no admission, no per-request stop) — the baseline the engine is
 benchmarked against in ``benchmarks/serve_bench.py``.
@@ -114,17 +119,36 @@ def _continuous_main(args, cfg, model, params):
     from repro.serve import Engine
 
     max_len = args.prompt_len + args.gen
-    engine = Engine(model, params, n_slots=args.slots, max_len=max_len)
+    if args.paged:
+        engine = Engine(model, params, n_slots=args.slots, max_len=max_len,
+                        paged=True, page_size=args.page_size,
+                        n_pages=args.pages or None,
+                        prefill_chunk_tokens=args.prefill_chunk or None)
+        mode = "paged"
+    else:
+        engine = Engine(model, params, n_slots=args.slots, max_len=max_len)
+        mode = "continuous"
     requests = make_requests(cfg, n_requests=args.requests, rate=args.rate,
                              prompt_len=args.prompt_len, gen=args.gen,
                              seed=args.seed)
     summary = serve_stream(engine, requests)
-    print(f"continuous: {summary['n_done']}/{summary['n_requests']} requests, "
+    print(f"{mode}: {summary['n_done']}/{summary['n_requests']} requests, "
           f"{summary['total_tokens']} tokens in {summary['elapsed_s']:.2f} s "
           f"({summary['agg_tok_s']:.0f} tok/s)")
     print(f"ttft mean/p50/p95: {summary['ttft_mean_s']*1e3:.0f}/"
           f"{summary['ttft_p50_s']*1e3:.0f}/{summary['ttft_p95_s']*1e3:.0f} ms; "
+          f"queue-wait p50/p95: {summary['queue_wait_p50_s']*1e3:.0f}/"
+          f"{summary['queue_wait_p95_s']*1e3:.0f} ms; "
+          f"e2e p50/p95: {summary['e2e_p50_s']*1e3:.0f}/"
+          f"{summary['e2e_p95_s']*1e3:.0f} ms; "
           f"slot occupancy {summary['occupancy_mean']*100:.0f}%")
+    if args.paged:
+        c = engine.cache
+        print(f"paged kv: page_size={c.page_size}, pool={c.n_pages} pages; "
+              f"allocated peak {summary['kv_bytes_allocated_peak']/1e6:.2f} MB"
+              f" vs dense reservation {summary['kv_bytes_reserved']/1e6:.2f} "
+              f"MB; prefill tokens computed {engine.n_prefill_tokens} "
+              f"(+{engine.n_prefill_tokens_skipped} reused via prefix cache)")
 
 
 def _restore_latest(ckpt_dir, params, tag=""):
@@ -228,6 +252,18 @@ def main(argv=None):
                    help="continuous-mode Poisson arrival rate (req/s)")
     p.add_argument("--slots", type=int, default=4,
                    help="continuous-mode decode slots")
+    p.add_argument("--paged", action="store_true",
+                   help="paged KV cache: page-pool memory, block tables, "
+                   "prefix reuse, chunked prefill (vs dense per-slot "
+                   "max_len reservation)")
+    p.add_argument("--page-size", type=int, default=16,
+                   help="paged-mode tokens per KV page")
+    p.add_argument("--pages", type=int, default=0,
+                   help="paged-mode pool size; 0 = dense-equivalent "
+                   "(n_slots * max_len / page_size + 1)")
+    p.add_argument("--prefill-chunk", type=int, default=0,
+                   help="paged-mode prefill chunk tokens (page multiple); "
+                   "0 = 4 pages")
     p.add_argument("--seed", type=int, default=0)
     p.add_argument("--mpd-c", type=int, default=0, help="0 = config default")
     p.add_argument("--mpd-fuse", action="store_true",
@@ -248,6 +284,9 @@ def main(argv=None):
     cfg0 = get_config(args.arch, smoke=args.smoke)
     if not cfg0.causal:
         raise SystemExit(f"{args.arch} is encoder-only (no decode)")
+    if args.static and args.paged:
+        raise SystemExit("--static and --paged are mutually exclusive "
+                         "(paged is a continuous-engine memory model)")
     cfg, model, params = _load_model(args)
     print(f"serving {cfg.name}: {model.param_count():,} params "
           f"(mode={cfg.mpd_mode})")

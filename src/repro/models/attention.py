@@ -180,10 +180,30 @@ def apply_train(spec: AttentionSpec, params, x, positions=None):
     return spec.wo.apply(params["wo"], o.reshape(B, T, spec.n_heads * spec.head_dim))
 
 
-def init_cache(spec: AttentionSpec, batch: int, max_len: int, dtype=jnp.bfloat16):
+def init_cache(spec: AttentionSpec, batch: int, max_len: int, dtype=None):
+    """Dense decode cache. ``dtype=None`` falls back to float32; the model
+    layer always passes its config dtype (``cfg.jdtype``) explicitly —
+    the old hardcoded bfloat16 default silently downcast f32-configured
+    models when this leaf was called directly."""
+    if dtype is None:
+        dtype = jnp.float32
     shape = (batch, max_len, spec.n_kv_heads, spec.head_dim)
     return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype),
             "pos": jnp.zeros((), jnp.int32)}
+
+
+def init_paged_cache(spec: AttentionSpec, n_slots: int, n_pages: int,
+                     page_size: int, dtype=None):
+    """Paged decode cache: a global K/V page pool plus a per-slot ``pos``.
+
+    Page 0 is the reserved *null* page — block-table entries past a
+    request's used depth point at it, so padded scatters and gathers always
+    hit a valid pool index (their values are masked out by ``pos``)."""
+    if dtype is None:
+        dtype = jnp.float32
+    shape = (n_pages, page_size, spec.n_kv_heads, spec.head_dim)
+    return {"kp": jnp.zeros(shape, dtype), "vp": jnp.zeros(shape, dtype),
+            "pos": jnp.zeros((n_slots,), jnp.int32)}
 
 
 def _update_rows(cache, new, pos):
@@ -231,3 +251,100 @@ def apply_decode(spec: AttentionSpec, params, x, cache):
     y = spec.wo.apply(params["wo"], o.reshape(B, 1, spec.n_heads * spec.head_dim))
     new_cache = {"k": k, "v": v, "pos": pos + 1}
     return y, new_cache
+
+
+def apply_decode_paged(spec: AttentionSpec, params, x, cache, block_tables,
+                       live=None):
+    """One decode step against the paged KV pool. x: (B, 1, D).
+
+    ``cache``: {"kp"/"vp": (n_pages, page_size, Kh, Dh), "pos": (B,)} —
+    the pool is shared by all slots; each slot's pages are named by its
+    ``block_tables`` row (B, P). The new K/V is scattered into
+    ``(page, offset)`` derived from the per-row ``pos``, then attention
+    runs through :func:`repro.kernels.ops.paged_attention` — jnp-route
+    bitwise-identical to :func:`apply_decode` on the same sequences,
+    Pallas-route an online-softmax page stream.
+
+    ``live`` (B,) bool masks rows that are actually decoding. This is
+    load-bearing, not hygiene: unlike the slot-dense cache (where a dead
+    row scatters harmlessly into its own reservation), the pool is shared
+    — a non-live row (mid-chunked-prefill, or freshly admitted with a
+    stale ``pos``) holds a real block table, and its clipped page index
+    can alias onto an already-prefilled (possibly trie-shared) page.
+    Non-live rows scatter to the null page and their ``pos`` freezes.
+    """
+    from repro.kernels import ops
+
+    B, T, _ = x.shape
+    assert T == 1
+    kp, vp = cache["kp"], cache["vp"]
+    page_size = kp.shape[1]
+    P = block_tables.shape[1]
+    pos = cache["pos"]                                        # (B,)
+    if spec.rope == "mrope":
+        p = pos[:, None]
+        positions = jnp.stack([p, p, p])
+    else:
+        positions = pos[:, None]
+    q, k_new, v_new = _qkv(spec, params, x, positions)
+    pidx = jnp.clip(pos // page_size, 0, P - 1)               # logical page
+    pages = jnp.take_along_axis(block_tables, pidx[:, None], axis=1)[:, 0]
+    if live is not None:
+        pages = jnp.where(live, pages, 0)                     # -> null page
+    offs = pos % page_size
+    kp = kp.at[pages, offs].set(k_new[:, 0].astype(kp.dtype))
+    vp = vp.at[pages, offs].set(v_new[:, 0].astype(vp.dtype))
+    o = ops.paged_attention(q[:, 0], kp.astype(q.dtype), vp.astype(q.dtype),
+                            block_tables, pos + 1)
+    o = shard(o[:, None], "batch", None, "heads", None)
+    y = spec.wo.apply(params["wo"], o.reshape(B, 1, spec.n_heads * spec.head_dim))
+    new_pos = pos + 1 if live is None else pos + live.astype(pos.dtype)
+    return y, {"kp": kp, "vp": vp, "pos": new_pos}
+
+
+def prefill_chunk_paged(spec: AttentionSpec, params, x, cache, bt_row, slot,
+                        start, chunk_len):
+    """One page-aligned prefill chunk of a single request (batch 1).
+
+    ``x: (1, Tc, D)`` with ``Tc`` a page multiple and ``start`` (the global
+    position of the chunk's first token) page-aligned; ``chunk_len <= Tc``
+    is the number of real tokens (the final chunk is right-padded).
+    ``bt_row: (P,)`` is the request's block-table row. The chunk's K/V is
+    scattered into its pages, then the chunk queries attend causally over
+    the request's whole cached context (reused prefix pages included) via a
+    block-table gather — masked columns are exact zeros, so the result is
+    bitwise what a monolithic prefill produces.
+    """
+    B, Tc, _ = x.shape
+    assert B == 1
+    kp, vp = cache["kp"], cache["vp"]
+    page_size = kp.shape[1]
+    P = bt_row.shape[0]
+    n_chunk_pages = Tc // page_size
+    assert Tc % page_size == 0, (Tc, page_size)
+    q_pos = start + jnp.arange(Tc)
+    if spec.rope == "mrope":
+        p1 = jnp.broadcast_to(q_pos[None], (1, Tc))
+        positions = jnp.stack([p1, p1, p1])
+    else:
+        positions = jnp.broadcast_to(q_pos[None], (1, Tc))
+    q, k, v = _qkv(spec, params, x, positions)
+    # chunk-page ids via masked gather, NOT dynamic_slice: a final chunk
+    # whose padded tail reaches past the table (max_len not a chunk
+    # multiple) must scatter that tail to the null page — a clamped slice
+    # would alias earlier entries and overwrite real K/V with garbage
+    idx = start // page_size + jnp.arange(n_chunk_pages)
+    page_ids = jnp.where(idx < P, bt_row[jnp.clip(idx, 0, P - 1)], 0)
+    Kh, Dh = spec.n_kv_heads, spec.head_dim
+    kp = kp.at[page_ids].set(
+        k[0].reshape(n_chunk_pages, page_size, Kh, Dh).astype(kp.dtype))
+    vp = vp.at[page_ids].set(
+        v[0].reshape(n_chunk_pages, page_size, Kh, Dh).astype(vp.dtype))
+    # gather this request's full context (prefix + the chunk just written)
+    kc = kp[bt_row].reshape(1, P * page_size, Kh, Dh).astype(q.dtype)
+    vc = vp[bt_row].reshape(1, P * page_size, Kh, Dh).astype(q.dtype)
+    kv_valid = (jnp.arange(P * page_size)[None, :] < start + chunk_len)
+    o = _attend(q, kc, vc, q_pos, kv_valid, causal=True)
+    y = spec.wo.apply(params["wo"], o.reshape(1, Tc, spec.n_heads * spec.head_dim))
+    pos = cache["pos"].at[slot].set(start + chunk_len)
+    return y, {"kp": kp, "vp": vp, "pos": pos}

@@ -146,7 +146,12 @@ class MambaSpec:
         out = self.w_out.apply(params["w_out"], y)
         return out, {"conv": new_conv, "h": h}
 
-    def init_state(self, batch: int, dtype=jnp.bfloat16):
+    def init_state(self, batch: int, dtype=None):
+        # dtype=None -> float32, matching the other cache leaves; the model
+        # layer passes cfg.jdtype explicitly (the old bfloat16 default here
+        # diverged from the config-routed path)
+        if dtype is None:
+            dtype = jnp.float32
         return {
             "conv": jnp.zeros((batch, self.d_conv - 1, self.d_inner), dtype),
             "h": jnp.zeros((batch, self.d_inner, self.d_state), jnp.float32),

@@ -347,6 +347,47 @@ class Model:
             out.append(c)
         return out
 
+    def init_paged_caches(self, n_slots: int, n_pages: int, page_size: int,
+                          dtype=None):
+        """Paged decode caches for the continuous-batching engine: attention
+        K/V lives in a global pool of ``(n_pages, page_size, Kh, Dh)`` pages
+        per layer (page 0 reserved as the null page), indexed per request by
+        a block table the engine owns; ``pos`` stays per-slot. Recurrent
+        layers (mamba/rwkv) carry O(1) state, i.e. a single *pinned page*
+        per slot — identical rows to :meth:`init_slot_caches` — so the
+        engine drives all three block families uniformly."""
+        if dtype is None:
+            dtype = self.cfg.jdtype
+        caches = []
+        for spec in self.block_specs:
+            kind = spec["kind"]
+            if kind in ("attn", "attn_moe"):
+                one = lambda s=spec: attn_lib.init_paged_cache(
+                    s["mixer"], n_slots, n_pages, page_size, dtype)
+            else:
+                one = lambda s=spec: s["mixer"].init_state(n_slots, dtype)
+            caches.append(
+                jax.tree.map(lambda *xs: jnp.stack(xs),
+                             *[one() for _ in range(self.n_periods)])
+                if self.n_periods > 1 else
+                jax.tree.map(lambda x: x[None], one())
+            )
+        return caches
+
+    def paged_cache_axes(self):
+        """Logical axes matching :meth:`init_paged_caches`. The page axis is
+        unsharded (pages are gathered by id — splitting the pool would turn
+        every block-table lookup into a collective); KV heads shard as
+        usual, recurrent pinned pages ride the ``batch`` rules."""
+        axes = []
+        for spec, a in zip(self.block_specs, self.slot_cache_axes()):
+            if spec["kind"] in ("attn", "attn_moe"):
+                a = {"kp": ("layers", None, None, "kv_heads", None),
+                     "vp": ("layers", None, None, "kv_heads", None),
+                     "pos": ("layers", "batch")}
+            axes.append(a)
+        return axes
+
     def slot_cache_axes(self):
         """Logical axes matching :meth:`init_slot_caches` (the per-slot axis
         is the cache "batch" axis, so slot caches shard like batch)."""
@@ -375,15 +416,33 @@ class Model:
                              "x_cm": ("layers", "batch", None, None)})
         return axes
 
-    def _decode_block(self, spec, p, x, cache):
+    def _decode_block(self, spec, p, x, cache, block_tables=None, live=None):
         cfg = self.cfg
         kind = spec["kind"]
+
+        def freeze(new_cache):
+            # non-live rows (paged engine: mid-chunked-prefill slots) must
+            # not advance — the next prefill chunk carries their state
+            if live is None:
+                return new_cache
+            return jax.tree.map(
+                lambda new, old: jnp.where(
+                    live.reshape((-1,) + (1,) * (new.ndim - 1)), new, old),
+                new_cache, cache)
+
         h = layers.apply_norm(cfg.norm, p["norm1"], x)
         if kind in ("attn", "attn_moe"):
-            y, cache = attn_lib.apply_decode(spec["mixer"], p["mixer"], h, cache)
+            if block_tables is not None:
+                y, cache = attn_lib.apply_decode_paged(
+                    spec["mixer"], p["mixer"], h, cache, block_tables,
+                    live=live)
+            else:
+                y, cache = attn_lib.apply_decode(spec["mixer"], p["mixer"],
+                                                 h, cache)
             x = x + y
         elif kind in ("mamba", "mamba_moe"):
-            y, cache = spec["mixer"].apply(p["mixer"], h, cache)
+            y, c_new = spec["mixer"].apply(p["mixer"], h, cache)
+            cache = freeze(c_new)
             x = x + y
         else:
             mix = spec["mixer"]
@@ -392,7 +451,7 @@ class Model:
             h2 = layers.apply_norm(cfg.norm, p["norm2"], x)
             y2, x_cm = mix.channel_mix(p["mixer"], h2, cache["x_cm"])
             x = x + y2
-            return x, {"S": s_new, "x_tm": x_tm, "x_cm": x_cm}
+            return x, freeze({"S": s_new, "x_tm": x_tm, "x_cm": x_cm})
         h2 = layers.apply_norm(cfg.norm, p["norm2"], x)
         if kind.endswith("_moe"):
             y2, _ = spec["ffn"].apply(p["ffn"], h2)
@@ -400,8 +459,18 @@ class Model:
             y2 = spec["ffn"].apply(p["ffn"], h2)
         return x + y2, cache
 
-    def decode_step(self, params, tokens, caches):
+    def decode_step(self, params, tokens, caches, block_tables=None,
+                    live=None):
         """One token step. tokens: (B,) int32 (or (B,1,D) embeds).
+
+        With ``block_tables`` ((B, P) int32 — the paged engine's per-slot
+        page maps, shared by every attention layer), attention layers run
+        the paged form against their page pools. ``live`` ((B,) bool) marks
+        rows actually decoding: the paged engine MUST pass it, because the
+        pool is shared — a non-live row (mid-chunked-prefill) would
+        otherwise scatter garbage K/V into real pages and advance the
+        recurrent state its next prefill chunk is about to carry. Non-live
+        rows compute (fixed batch shape) but write nothing.
 
         Returns (logits (B, vocab), new caches).
         """
@@ -412,14 +481,107 @@ class Model:
             x = tokens.astype(cfg.jdtype)
         new_caches = []
         for spec, pstack, cstack in zip(self.block_specs, params["blocks"], caches):
-            def body(x, pc):
+            def body(x, pc, spec=spec):
                 p, c = pc
-                x, c2 = self._decode_block(spec, p, x, c)
+                x, c2 = self._decode_block(spec, p, x, c,
+                                           block_tables=block_tables,
+                                           live=live)
                 return x, c2
             x, c_new = jax.lax.scan(body, x, (pstack, cstack))
             new_caches.append(c_new)
         x = layers.apply_norm(cfg.norm, params["final_norm"], x)
         lg = self.unembed.apply(params["unembed"], x[:, 0])
+        return lg, new_caches
+
+    def prefill_chunk(self, params, tokens, caches, bt_row, slot, start,
+                      chunk_len):
+        """One page-aligned chunk of a single request's prefill (batch 1),
+        writing into the paged caches in place of a monolithic
+        :meth:`prefill` — the chunked-prefill building block.
+
+        ``tokens: (1, Tc)`` with ``Tc`` a page multiple; ``start`` (scalar,
+        page-aligned) is the chunk's global offset — with prefix reuse the
+        first chunk starts past the trie-matched pages; ``chunk_len <= Tc``
+        is the number of real tokens (final chunk right-padded with zeros).
+        ``bt_row: (P,)`` the request's block-table row; ``slot`` the decode
+        slot whose recurrent state rows carry across chunks (selected
+        branchlessly: at ``start == 0`` the carried state reads as zeros, so
+        a slot's previous occupant never leaks in).
+
+        Returns ``(logits (1, vocab) at the chunk's last real token,
+        caches)`` — the logits are meaningful on the final chunk, where the
+        engine samples the first token.
+        """
+        cfg = self.cfg
+        slot = jnp.asarray(slot, jnp.int32)
+        start = jnp.asarray(start, jnp.int32)
+        chunk_len = jnp.asarray(chunk_len, jnp.int32)
+        x = self._embed_inputs(params, tokens)
+        Tc = x.shape[1]
+        valid = (jnp.arange(Tc)[None, :] < chunk_len)          # (1, Tc)
+
+        def take_row(leaf):
+            return jax.lax.dynamic_slice_in_dim(leaf, slot, 1, axis=0)
+
+        def put_row(leaf, row):
+            return jax.lax.dynamic_update_slice_in_dim(
+                leaf, row.astype(leaf.dtype), slot, axis=0)
+
+        def carried(zeros, row):
+            # first chunk of a request: ignore the slot's stale state
+            return jnp.where(start == 0, zeros, row)
+
+        new_caches = []
+        for spec, pstack, cstack in zip(self.block_specs, params["blocks"],
+                                        caches):
+            kind = spec["kind"]
+
+            def body(x, pc, spec=spec, kind=kind):
+                p, c = pc
+                h = layers.apply_norm(cfg.norm, p["norm1"], x)
+                if kind in ("attn", "attn_moe"):
+                    y, c2 = attn_lib.prefill_chunk_paged(
+                        spec["mixer"], p["mixer"], h, c, bt_row, slot, start,
+                        chunk_len)
+                    x = x + y
+                elif kind in ("mamba", "mamba_moe"):
+                    mix = spec["mixer"]
+                    zst = mix.init_state(1, x.dtype)
+                    st = jax.tree.map(
+                        lambda z, l: carried(z, take_row(l).astype(z.dtype)),
+                        zst, {k: c[k] for k in zst})
+                    y, s2 = mix.apply(p["mixer"], h, st, valid=valid)
+                    x = x + y
+                    c2 = {k: put_row(c[k], s2[k]) for k in s2}
+                else:  # rwkv
+                    mix = spec["mixer"]
+                    zst = mix.init_state(1, x.dtype)
+                    st = jax.tree.map(
+                        lambda z, l: carried(z, take_row(l).astype(z.dtype)),
+                        zst, {k: c[k] for k in zst})
+                    y, s_new, x_tm = mix.time_mix(p["mixer"], h, st["S"],
+                                                  st["x_tm"], valid=valid)
+                    x = x + y
+                    h2 = layers.apply_norm(cfg.norm, p["norm2"], x)
+                    y2, x_cm = mix.channel_mix(p["mixer"], h2, st["x_cm"],
+                                               valid=valid)
+                    x = x + y2
+                    return x, {"S": put_row(c["S"], s_new),
+                               "x_tm": put_row(c["x_tm"], x_tm),
+                               "x_cm": put_row(c["x_cm"], x_cm)}
+                h2 = layers.apply_norm(cfg.norm, p["norm2"], x)
+                if kind.endswith("_moe"):
+                    y2, _ = spec["ffn"].apply(p["ffn"], h2)
+                else:
+                    y2 = spec["ffn"].apply(p["ffn"], h2)
+                return x + y2, c2
+
+            x, c_new = jax.lax.scan(body, x, (pstack, cstack))
+            new_caches.append(c_new)
+        x = layers.apply_norm(cfg.norm, params["final_norm"], x)
+        x_last = jnp.take_along_axis(
+            x, jnp.maximum(chunk_len - 1, 0)[None, None, None], axis=1)[:, 0]
+        lg = self.unembed.apply(params["unembed"], x_last)
         return lg, new_caches
 
     def prefill(self, params, inputs, caches, lengths=None):

@@ -1,19 +1,23 @@
 """repro.serve — continuous-batching inference engine.
 
-Slot-based serving on top of the model zoo's ``prefill`` / ``decode_step``:
-a fixed-shape decode batch of ``n_slots`` sequences, FCFS admission with
-bucketed prompt padding, per-request sampling/stop, and slot caches that
-shard through ``repro.dist`` logical-axis rules. See ``engine.Engine``.
+Serving on top of the model zoo's ``prefill`` / ``decode_step``: a
+fixed-shape decode batch of ``n_slots`` sequences, FCFS admission,
+per-request sampling/stop, and caches that shard through ``repro.dist``
+logical-axis rules. Two memory models (see ``engine.Engine``): slot-dense
+(``SlotCache`` — per-slot ``max_len`` reservation, bucketed one-shot
+prefill) and paged (``PagedCache`` — global KV page pool, block tables,
+ref-counted prefix reuse, chunked prefill, paged-attention decode).
 """
 
-from .cache import SlotCache
+from .cache import PagedCache, PagePool, PrefixTrie, SlotCache
 from .engine import Engine
 from .metrics import RequestMetrics, ServeMetrics
 from .sampling import SamplingParams, sample
 from .scheduler import Request, RequestState, Scheduler, make_buckets
 
 __all__ = [
-    "Engine", "SlotCache", "ServeMetrics", "RequestMetrics",
+    "Engine", "SlotCache", "PagedCache", "PagePool", "PrefixTrie",
+    "ServeMetrics", "RequestMetrics",
     "SamplingParams", "sample", "Request", "RequestState", "Scheduler",
     "make_buckets",
 ]

@@ -1,24 +1,36 @@
-"""Slot-based decode-cache manager for the continuous-batching engine.
+"""Decode-cache managers for the continuous-batching engine.
 
-The engine decodes a fixed batch of ``n_slots`` sequences; each slot owns
-one row of every cache leaf (KV caches, SSM/RWKV states, per-slot attention
-``pos``). Admission prefills a single request (batch 1, bucket-padded) and
-*writes back* its caches into the assigned slot with
-``dynamic_update_slice`` at the leaf's batch axis — one jitted program for
-any slot index, so slot reuse never recompiles.
+Two memory models:
+
+* :class:`SlotCache` — slot-dense: every slot reserves ``max_len`` rows of
+  K/V per layer up front. Simple, but HBM cost and decode bandwidth scale
+  with ``max_len`` instead of actual sequence depth.
+* :class:`PagedCache` — paged: attention K/V lives in a global pool of
+  fixed-size pages per layer (the serving-side dual of the paper's
+  block-structured weights), each request holds an ordered list of page
+  ids (its *block table*), a host-side free list hands pages out, and a
+  ref-counted prefix trie keyed on page-aligned prompt chunks lets
+  requests that share a prompt prefix reuse already-prefilled pages.
+  Cached pages are immutable — extending a shared prefix allocates fresh
+  pages (copy-on-write without the copy, since sharing is only ever
+  whole-page). Recurrent layers (mamba/rwkv) keep their O(1) state as a
+  single pinned page per slot, so the engine treats all block families
+  uniformly.
 
 Sharding: leaves are placed via ``repro.dist`` logical-axis rules
-(``Model.slot_cache_axes()``) when a mesh is active — the KV ``kv_seq``
-axis shards exactly like the static serving path, and the slot axis rides
-the ``batch`` rules.
+(``Model.slot_cache_axes()`` / ``Model.paged_cache_axes()``) when a mesh
+is active — KV heads shard as usual; the page axis stays unsharded (pages
+are fetched by id).
 """
 
 from __future__ import annotations
 
-from typing import Any, List
+import math
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.dist import sharding as sh
 
@@ -48,6 +60,14 @@ class SlotCache:
                                            model.slot_cache_axes(), like=caches)
             caches = jax.device_put(caches, placements)
         self.caches = caches
+        # attention KV footprint (the dense reservation the paged model is
+        # benchmarked against); recurrent state is excluded — it is the
+        # same fixed size under both memory models
+        self.kv_bytes = sum(
+            c["k"].nbytes + c["v"].nbytes
+            for spec, c in zip(model.block_specs, caches)
+            if spec["kind"] in ("attn", "attn_moe"))
+        self.token_bytes = self.kv_bytes / (n_slots * max_len)
         self._batch_ix = _batch_axis_tree(model)
         # jitted lazily: the engine fuses _write_impl into its admission
         # program, so standalone wrappers are only compiled if actually used
@@ -87,3 +107,337 @@ class SlotCache:
         if self._reset is None:
             self._reset = jax.jit(self._reset_impl)
         self.caches = self._reset(self.caches, jnp.asarray(slot, jnp.int32))
+
+
+# ==========================================================================
+# paged memory model
+# ==========================================================================
+
+NULL_PAGE = 0
+
+
+class PagePool:
+    """Host-side page allocator: a free list plus per-page refcounts.
+
+    Page 0 is the reserved null page (never handed out): block-table
+    entries past a request's used depth point at it, so device scatters
+    and gathers always hit a valid pool index. A page is *free* when its
+    refcount is 0; holders are requests (one ref per block-table entry
+    naming it) and the prefix trie (one ref per cached node).
+    """
+
+    def __init__(self, n_pages: int):
+        if n_pages < 2:
+            raise ValueError(f"pool needs >= 2 pages (null + 1), got {n_pages}")
+        self.n_pages = n_pages
+        self.ref = np.zeros(n_pages, np.int32)
+        self.ref[NULL_PAGE] = 1                    # permanently pinned
+        self._free = list(range(n_pages - 1, 0, -1))   # pop() -> lowest id
+
+    @property
+    def free_count(self) -> int:
+        return len(self._free)
+
+    @property
+    def allocated_count(self) -> int:
+        """Pages currently held by at least one owner (excluding null)."""
+        return (self.n_pages - 1) - len(self._free)
+
+    def alloc(self) -> int:
+        if not self._free:
+            raise RuntimeError("page pool exhausted")
+        pid = self._free.pop()
+        assert self.ref[pid] == 0, pid
+        self.ref[pid] = 1
+        return pid
+
+    def retain(self, pid: int) -> None:
+        assert pid != NULL_PAGE and self.ref[pid] > 0, pid
+        self.ref[pid] += 1
+
+    def release(self, pid: int) -> None:
+        assert pid != NULL_PAGE and self.ref[pid] > 0, pid
+        self.ref[pid] -= 1
+        if self.ref[pid] == 0:
+            self._free.append(pid)
+
+
+class PrefixTrie:
+    """Ref-counted prefix cache keyed on page-aligned prompt chunks.
+
+    A node is a *full* page of prompt tokens, keyed by the whole token
+    prefix it completes (hashable tuple) — matching walks page by page and
+    stops at the first miss, so an entry is only reachable while all its
+    ancestors are cached; eviction is therefore leaf-first (LRU among
+    nodes no longer extended by another cached node, tracked by a
+    per-node child count so the evictable scan is linear, not quadratic).
+    The trie holds one pool ref per node: a page whose only holder is the
+    trie (ref == 1) is *evictable*; pages also held by a live request are
+    not.
+
+    Keys store the full prefix per node — O(depth²·page_size) ints for a
+    deep chain — which is fine at serving-bench scale; a parent-linked
+    layout (``(parent_id, page_tokens)`` keys) is the upgrade path if
+    multi-thousand-page prompts ever matter.
+    """
+
+    def __init__(self, pool: PagePool, page_size: int):
+        self.pool = pool
+        self.page_size = page_size
+        self.nodes: Dict[Tuple[int, ...], int] = {}    # token prefix -> page
+        self._tick = 0
+        self._last_use: Dict[Tuple[int, ...], int] = {}
+        self._n_children: Dict[Tuple[int, ...], int] = {}
+
+    def __len__(self) -> int:
+        return len(self.nodes)
+
+    def match(self, prompt: np.ndarray, max_pages: int,
+              touch: bool = True) -> List[int]:
+        """Longest cached page-aligned prefix of ``prompt`` (read-only —
+        refs are taken by the caller). Capped at ``max_pages`` so at least
+        one prompt token is always left to compute (the engine needs the
+        last-token logits to sample). ``touch=False`` is the capacity
+        probe: it must not bump LRU recency (a blocked queue head re-probes
+        every step and would otherwise pin its own prefix hot)."""
+        ps = self.page_size
+        toks = tuple(int(t) for t in prompt[: max_pages * ps])
+        pages: List[int] = []
+        if touch:
+            self._tick += 1
+        for j in range(max_pages):
+            key = toks[: (j + 1) * ps]
+            if len(key) < (j + 1) * ps or key not in self.nodes:
+                break
+            pages.append(self.nodes[key])
+            if touch:
+                self._last_use[key] = self._tick
+        return pages
+
+    def insert(self, prompt: np.ndarray, page_index: int, pid: int) -> bool:
+        """Cache page ``page_index`` of ``prompt`` (must be full and
+        prefilled). Takes a pool ref on insert; no-op if already cached."""
+        key = tuple(int(t) for t in prompt[: (page_index + 1) * self.page_size])
+        if key in self.nodes:
+            return False
+        self.nodes[key] = pid
+        parent = key[:-self.page_size]
+        if parent in self.nodes:
+            self._n_children[parent] = self._n_children.get(parent, 0) + 1
+        self.pool.retain(pid)
+        self._tick += 1
+        self._last_use[key] = self._tick
+        return True
+
+    def evictable(self) -> List[Tuple[int, Tuple[int, ...]]]:
+        """(last_use, key) of evictable leaves: trie-only refs (ref == 1),
+        not extended by another cached node (per-node child counts keep
+        this scan linear in cached nodes)."""
+        return [(self._last_use[key], key)
+                for key, pid in self.nodes.items()
+                if self.pool.ref[pid] == 1
+                and not self._n_children.get(key)]
+
+    def evict_one(self) -> Optional[int]:
+        """Drop the LRU evictable leaf, freeing its page. Returns the page
+        id (now on the free list) or None."""
+        cands = self.evictable()
+        if not cands:
+            return None
+        _, key = min(cands)
+        pid = self.nodes.pop(key)
+        self._last_use.pop(key, None)
+        self._n_children.pop(key, None)
+        parent = key[:-self.page_size]
+        if parent in self._n_children:
+            self._n_children[parent] -= 1
+            if not self._n_children[parent]:
+                del self._n_children[parent]
+        self.pool.release(pid)
+        return pid
+
+    def evictable_count(self) -> int:
+        return len(self.evictable())
+
+    def reclaimable_count(self) -> int:
+        """Pages the trie could hand back via *cascading* leaf eviction:
+        every trie-only (ref == 1) node. Strictly larger than
+        :meth:`evictable_count` for deep chains — a 15-page chain has one
+        evictable leaf but 15 reclaimable pages, and ``_alloc_page``'s
+        evict-per-allocation loop does drain it leaf by leaf. (A ref==1
+        parent can never hide a ref>1 child: matching retains every
+        ancestor, so request refs are upward-closed along a chain.)"""
+        return int(sum(1 for pid in self.nodes.values()
+                       if self.pool.ref[pid] == 1))
+
+
+class PagedCache:
+    """Owns the device-side paged caches, the host-side block tables, the
+    page allocator, and the prefix trie.
+
+    The engine drives it host-side: :meth:`can_admit` /
+    :meth:`admit_request` at admission, :meth:`publish_prefix` as prefill
+    chunks land (pages become reusable only once their K/V is actually
+    written), :meth:`ensure_decode_page` before decode steps, and
+    :meth:`free_slot` at eviction. Deadlock-freedom: admission reserves the
+    request's worst-case page count (prompt + ``max_new_tokens``), decode
+    pages materialize lazily against that reservation, so an admitted
+    request can always run to completion.
+    """
+
+    def __init__(self, model, n_slots: int, max_len: int, *,
+                 page_size: int = 16, n_pages: Optional[int] = None,
+                 dtype=None):
+        self.model = model
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.page_size = page_size
+        self.max_pages = math.ceil(max_len / page_size)   # block-table width
+        if n_pages is None:
+            # dense-equivalent capacity + the null page
+            n_pages = n_slots * self.max_pages + 1
+        self.n_pages = n_pages
+        self.dtype = dtype
+
+        caches = model.init_paged_caches(n_slots, n_pages, page_size, dtype)
+        mesh, rules = sh.current()
+        if mesh is not None and rules is not None:
+            placements = sh.tree_shardings(mesh, rules,
+                                           model.paged_cache_axes(),
+                                           like=caches)
+            caches = jax.device_put(caches, placements)
+        self.caches = caches
+        self.pool = PagePool(n_pages)
+        self.trie = PrefixTrie(self.pool, page_size)
+        # host-authoritative block tables; device copies are sliced views
+        # pushed on demand (see Engine._block_tables_dev)
+        self.block_tables = np.zeros((n_slots, self.max_pages), np.int32)
+        self.dirty = True
+        self.reserved = 0                       # promised-but-unallocated
+        self._slot_reserved = [0] * n_slots
+        # prefix caching needs every admitted token's K/V to live in pages;
+        # recurrent state cannot be reconstructed from a matched prefix
+        self.prefix_cache_enabled = all(
+            s["kind"] in ("attn", "attn_moe") for s in model.block_specs)
+
+        # bytes accounting (attention K/V only — recurrent state is the
+        # same fixed size under both memory models)
+        page_bytes = 0
+        for spec, c in zip(model.block_specs, self.caches):
+            if spec["kind"] in ("attn", "attn_moe"):
+                for leaf in (c["kp"], c["vp"]):
+                    page_bytes += leaf.nbytes // n_pages
+        self.page_bytes = page_bytes
+        self.token_bytes = page_bytes / page_size if page_size else 0.0
+        self.dense_reserved_bytes = int(n_slots * max_len * self.token_bytes)
+
+    # ------------------------------------------------------------ accounting
+    def kv_bytes_allocated(self) -> int:
+        return self.pool.allocated_count * self.page_bytes
+
+    def pages_for(self, n_tokens: int) -> int:
+        return math.ceil(n_tokens / self.page_size)
+
+    def available(self) -> int:
+        """Pages obtainable right now: free-list plus trie pages
+        reclaimable by cascading leaf eviction, minus outstanding
+        reservations. Counting only *currently evictable* leaves here
+        would under-report deep cached chains and livelock admission
+        (can_admit refusing forever what _alloc_page could satisfy)."""
+        return (self.pool.free_count + self.trie.reclaimable_count()
+                - self.reserved)
+
+    # ------------------------------------------------------------- admission
+    def _match(self, prompt: np.ndarray, touch: bool = True) -> List[int]:
+        if not self.prefix_cache_enabled or len(prompt) <= self.page_size:
+            return []
+        # never match the *entire* prompt: the engine must compute at least
+        # one token to read last-token logits
+        cap = (len(prompt) - 1) // self.page_size
+        return self.trie.match(prompt, cap, touch=touch)
+
+    def can_admit(self, prompt_len: int, max_new_tokens: int,
+                  prompt: Optional[np.ndarray] = None) -> bool:
+        matched = self._match(prompt, touch=False) if prompt is not None \
+            else []
+        total = self.pages_for(prompt_len + max_new_tokens)
+        # matched pages whose only holder is the trie are counted in
+        # available() as evictable, but admission pins them (retain) —
+        # they are consumed capacity, not free capacity
+        pinned = sum(1 for pid in matched if self.pool.ref[pid] == 1)
+        return total - len(matched) + pinned <= self.available()
+
+    def _alloc_page(self) -> int:
+        if self.pool.free_count == 0:
+            if self.trie.evict_one() is None:
+                raise RuntimeError(
+                    "page pool exhausted with nothing evictable — "
+                    "admission reservation accounting is broken")
+        return self.pool.alloc()
+
+    def admit_request(self, slot: int, prompt: np.ndarray,
+                      max_new_tokens: int) -> int:
+        """Build the slot's block table: reuse trie-matched prefix pages
+        (retained per-request), allocate fresh pages for the rest of the
+        prompt, and reserve the worst-case decode pages. Returns the number
+        of prefix tokens whose prefill is skipped."""
+        matched = self._match(prompt)
+        for pid in matched:
+            self.pool.retain(pid)
+        n_prompt_pages = self.pages_for(len(prompt))
+        row = self.block_tables[slot]
+        row[:] = NULL_PAGE
+        for j, pid in enumerate(matched):
+            row[j] = pid
+        for j in range(len(matched), n_prompt_pages):
+            row[j] = self._alloc_page()
+        total = self.pages_for(len(prompt) + max_new_tokens)
+        n_res = total - n_prompt_pages
+        self.reserved += n_res
+        self._slot_reserved[slot] = n_res
+        self.dirty = True
+        return len(matched) * self.page_size
+
+    # -------------------------------------------------------------- runtime
+    def publish_prefix(self, prompt: np.ndarray, slot: int,
+                       upto_tokens: int, from_tokens: int = 0) -> None:
+        """Insert the slot's *full, already-prefilled* prompt pages (tokens
+        ``[from_tokens, upto_tokens)``) into the prefix trie so later
+        requests can share them. Idempotent; partial pages are never
+        published (decode may still write into the last prompt page).
+        ``from_tokens`` (the pre-chunk prefill position) keeps per-chunk
+        publishing O(chunk): pages before it are already cached (matched
+        prefix or an earlier chunk's publish) — re-keying the whole prefix
+        per chunk would be quadratic in prompt length on the host."""
+        if not self.prefix_cache_enabled:
+            return
+        n_full = min(upto_tokens, len(prompt)) // self.page_size
+        row = self.block_tables[slot]
+        for j in range(from_tokens // self.page_size, n_full):
+            self.trie.insert(prompt, j, int(row[j]))
+
+    def ensure_decode_page(self, slot: int, write_pos: int) -> None:
+        """Make sure the page covering ``write_pos`` exists in the slot's
+        table, drawing on the slot's reservation when it must allocate."""
+        j = write_pos // self.page_size
+        if self.block_tables[slot, j] == NULL_PAGE:
+            self.block_tables[slot, j] = self._alloc_page()
+            self.reserved -= 1
+            self._slot_reserved[slot] -= 1
+            self.dirty = True
+
+    def pages_used(self, slot: int, kv_len: int) -> int:
+        """Block-table width needed to cover ``kv_len`` cached tokens."""
+        return min(self.pages_for(max(kv_len, 1)), self.max_pages)
+
+    def free_slot(self, slot: int) -> None:
+        """Release the slot's page refs (trie-cached pages persist for
+        reuse; private pages return to the free list) and drop its
+        remaining reservation."""
+        row = self.block_tables[slot]
+        for pid in row[row != NULL_PAGE]:
+            self.pool.release(int(pid))
+        row[:] = NULL_PAGE
+        self.reserved -= self._slot_reserved[slot]
+        self._slot_reserved[slot] = 0
+        self.dirty = True

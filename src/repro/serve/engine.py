@@ -5,14 +5,32 @@ The engine serves a stream of variable-length requests through the model's
 
 * the decode batch is always ``n_slots`` rows (free slots carry inert
   filler — row-independent block families make their garbage harmless);
-* admission prefills one request at a time, bucket-padded (one compile per
-  bucket) with the length-aware ``prefill(lengths=...)``, samples the first
-  token in the same dispatch, then writes the batch-1 caches into the
-  assigned slot (:class:`SlotCache`);
-* each step interleaves: admit waiting requests into free slots, then one
-  batched decode of every live slot with per-slot sampling params and
-  per-request stop conditions (EOS id, max_new_tokens); finished slots are
-  evicted and backfilled from the queue on the next step.
+* each step interleaves: admit waiting requests into free slots, (paged
+  mode) run prefill chunks under the token budget, then one batched decode
+  of every live slot with per-slot sampling params and per-request stop
+  conditions (EOS id, max_new_tokens); finished slots are evicted and
+  backfilled from the queue on the next step.
+
+Two memory models select at construction:
+
+* **slot-dense** (default): admission prefills one request at a time,
+  bucket-padded (one compile per bucket) with the length-aware
+  ``prefill(lengths=...)``, samples the first token in the same dispatch,
+  then writes the batch-1 caches into the assigned slot
+  (:class:`SlotCache`). One blocking dispatch per admission; every slot
+  reserves ``max_len`` KV rows.
+* **paged** (``paged=True``): attention K/V lives in a global page pool
+  (:class:`PagedCache`). Admission only builds the request's block table
+  (reusing trie-cached prefix pages — a shared system prompt is prefilled
+  once); the prompt is then processed in fixed-shape page-multiple
+  *chunks* interleaved with decode under a per-step token budget, so a
+  long prompt never head-of-line-blocks running decodes and there is no
+  largest-bucket rejection (ONE prefill compile total, vs one per
+  bucket). Decode runs through the paged-attention op over an *active*
+  block-table width that tracks the deepest live sequence (power-of-two
+  ladder — a handful of compiles), so decode bandwidth follows actual
+  depth, not ``max_len``. Admission blocks on page-pool pressure, not
+  just free slots; eviction returns a request's non-shared pages.
 
 Per-slot sampling state (current token, temperature, top-k, PRNG key,
 generation counter) lives on device and round-trips through the single
@@ -21,22 +39,28 @@ token transfer for the host-side stop checks.
 
 Exactness contract: for row-independent architectures (everything except
 capacity-constrained MoE routing) greedy output is token-for-token
-identical to a static batched decode of the same prompts — verified in
-``tests/test_serve_engine.py``.
+identical to a static batched decode of the same prompts — in BOTH memory
+models — verified in ``tests/test_serve_engine.py`` /
+``tests/test_serve_paged.py``.
 """
 
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Sequence
+import collections
+from typing import Deque, Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from . import sampling as sampling_lib
-from .cache import SlotCache
+from .cache import PagedCache, SlotCache
 from .metrics import ServeMetrics
 from .scheduler import Request, RequestState, Scheduler
+
+
+def _next_pow2(n: int) -> int:
+    return 1 << max(n - 1, 0).bit_length()
 
 
 class Engine:
@@ -44,7 +68,11 @@ class Engine:
 
     def __init__(self, model, params, *, n_slots: int = 8, max_len: int = 128,
                  min_bucket: int = 16, buckets: Optional[Sequence[int]] = None,
-                 dtype=None, metrics: Optional[ServeMetrics] = None):
+                 dtype=None, metrics: Optional[ServeMetrics] = None,
+                 paged: bool = False, page_size: int = 16,
+                 n_pages: Optional[int] = None,
+                 prefill_chunk_tokens: Optional[int] = None,
+                 prefill_token_budget: Optional[int] = None):
         cfg = model.cfg
         if not cfg.causal:
             raise ValueError(f"{cfg.name}: encoder-only arch has no decode step")
@@ -56,11 +84,41 @@ class Engine:
         self.params = params
         self.n_slots = n_slots
         self.max_len = max_len
-        self.scheduler = Scheduler(n_slots, max_len, min_bucket=min_bucket,
-                                   buckets=buckets)
-        self.cache = SlotCache(model, n_slots, max_len, dtype)
+        self.paged = paged
         self.metrics = metrics if metrics is not None else ServeMetrics()
         self.step_count = 0
+
+        if paged:
+            self.cache = PagedCache(model, n_slots, max_len,
+                                    page_size=page_size, n_pages=n_pages,
+                                    dtype=dtype)
+            # chunks replace buckets: no largest-bucket rejection, one
+            # prefill compile instead of one per bucket
+            self.scheduler = Scheduler(n_slots, max_len, strict_buckets=False)
+            ps = self.cache.page_size
+            if prefill_chunk_tokens is None:
+                prefill_chunk_tokens = min(4 * ps, self.cache.max_pages * ps)
+            if prefill_chunk_tokens % ps:
+                raise ValueError(
+                    f"prefill_chunk_tokens({prefill_chunk_tokens}) must be a "
+                    f"multiple of page_size({ps})")
+            self.chunk_tokens = prefill_chunk_tokens
+            self.prefill_token_budget = (prefill_token_budget
+                                         or prefill_chunk_tokens)
+            self._prefill_queue: Deque[Request] = collections.deque()
+            self._chunk = jax.jit(self._prefill_chunk_impl)
+            self._decode_paged = jax.jit(self._decode_paged_impl)
+            self._bt_dev: Dict[int, jax.Array] = {}
+            # observability for the prefix-reuse contract (tests assert a
+            # shared-prefix batch skips chunks)
+            self.n_prefill_chunks = 0
+            self.n_prefill_tokens = 0          # computed
+            self.n_prefill_tokens_skipped = 0  # reused from the trie
+        else:
+            self.scheduler = Scheduler(n_slots, max_len, min_bucket=min_bucket,
+                                       buckets=buckets)
+            self.cache = SlotCache(model, n_slots, max_len, dtype)
+            self._admit = jax.jit(self._admit_impl)  # one compile per bucket
 
         # device-side per-slot sampling state (round-trips through _decode)
         self._dev = {
@@ -71,16 +129,17 @@ class Engine:
             "counters": jnp.zeros((n_slots,), jnp.int32),
         }
         self._live = np.zeros((n_slots,), bool)     # host-side liveness
+        self._live_dev = None                       # device copy, lazy-synced
 
         self._decode = jax.jit(self._decode_impl)
-        self._admit = jax.jit(self._admit_impl)      # one compile per bucket
         self._clear_slot = jax.jit(self._clear_slot_impl)
 
     # ------------------------------------------------------------ jitted ops
     def _admit_impl(self, params, caches, dev, padded, length, slot, temp,
                     top_k, key):
-        """One-dispatch admission: bucket-padded batch-1 prefill, first-token
-        sampling, cache writeback into ``slot``, sampling-state update."""
+        """One-dispatch slot-dense admission: bucket-padded batch-1 prefill,
+        first-token sampling, cache writeback into ``slot``, sampling-state
+        update."""
         pcaches = self.model.init_caches(1, self.max_len, self.cache.dtype)
         logits, pcaches = self.model.prefill(params, padded, pcaches,
                                              lengths=length)
@@ -96,6 +155,29 @@ class Engine:
         tokens = sampling_lib.sample(logits, dev["temps"], dev["top_ks"], keys)
         dev = dict(dev, tokens=tokens, counters=dev["counters"] + 1)
         return dev, caches
+
+    def _decode_paged_impl(self, params, caches, dev, block_tables, live):
+        logits, caches = self.model.decode_step(params, dev["tokens"], caches,
+                                                block_tables=block_tables,
+                                                live=live)
+        keys = sampling_lib.fold_keys(dev["keys"], dev["counters"])
+        tokens = sampling_lib.sample(logits, dev["temps"], dev["top_ks"], keys)
+        dev = dict(dev, tokens=tokens, counters=dev["counters"] + 1)
+        return dev, caches
+
+    def _prefill_chunk_impl(self, params, caches, dev, tokens, bt_row, slot,
+                            start, chunk_len, temp, top_k, key):
+        """One prefill chunk fused with first-token sampling + slot arming
+        — one dispatch per chunk. On non-final chunks the sampled token and
+        slot state are garbage that the next chunk (or the final one)
+        overwrites; only the final chunk's result is consumed."""
+        logits, caches = self.model.prefill_chunk(params, tokens, caches,
+                                                  bt_row, slot, start,
+                                                  chunk_len)
+        keys = sampling_lib.fold_keys(key[None], jnp.zeros((1,), jnp.int32))
+        tok = sampling_lib.sample(logits, temp[None], top_k[None], keys)[0]
+        dev = self._set_slot_impl(dev, slot, tok, temp, top_k, key)
+        return tok, caches, dev
 
     def _set_slot_impl(self, dev, slot, tok, temp, top_k, key):
         return {
@@ -138,6 +220,106 @@ class Engine:
         req.state = RequestState.DECODE
         self._emit(req, int(tok_dev))
 
+    def _admit_one_paged(self, req: Request, slot: int) -> None:
+        """Paged admission is bookkeeping only: build the block table
+        (reusing trie-matched prefix pages) and queue the prefill chunks —
+        no device work until the chunk loop runs."""
+        self.metrics.on_admit(req.id)
+        matched = self.cache.admit_request(slot, req.prompt,
+                                           req.max_new_tokens)
+        req.prefill_pos = matched
+        req.n_matched = matched
+        self.n_prefill_tokens_skipped += matched
+        self._prefill_queue.append(req)
+
+    def _prefill_chunks(self) -> bool:
+        """Run prefill chunks FCFS under the per-step token budget; arm
+        slots whose final chunk lands. Returns True if any chunk ran."""
+        budget = self.prefill_token_budget
+        ran = False
+        while budget > 0 and self._prefill_queue:
+            req = self._prefill_queue[0]
+            slot = req.slot
+            pos = req.prefill_pos
+            plen = len(req.prompt)
+            tc = self.chunk_tokens
+            n_real = min(plen - pos, tc)
+            toks = np.zeros((1, tc), np.int32)
+            toks[0, :n_real] = req.prompt[pos:pos + n_real]
+            # the chunk attends over [0, pos + tc): hand it only that many
+            # block-table columns (power-of-two ladder, like decode), so
+            # chunk attention reads context proportional to actual depth
+            ctx_pages = min(_next_pow2(self.cache.pages_for(pos + tc)),
+                            self.cache.max_pages)
+            sp = req.sampling
+            tok_dev, self.cache.caches, self._dev = self._chunk(
+                self.params, self.cache.caches, self._dev, jnp.asarray(toks),
+                jnp.asarray(self.cache.block_tables[req.slot][:ctx_pages]),
+                jnp.asarray(slot, jnp.int32), jnp.asarray(pos, jnp.int32),
+                jnp.asarray(n_real, jnp.int32),
+                jnp.asarray(sp.temperature, jnp.float32),
+                jnp.asarray(sp.top_k, jnp.int32),
+                sampling_lib.base_key(sp.seed))
+            req.prefill_pos = pos + n_real
+            self.n_prefill_chunks += 1
+            self.n_prefill_tokens += n_real
+            self.metrics.on_prefill_tokens(n_real)
+            budget -= tc
+            ran = True
+            # the chunk's full prompt pages now hold real K/V -> shareable
+            self.cache.publish_prefix(req.prompt, slot, req.prefill_pos,
+                                      from_tokens=pos)
+            if req.prefill_pos >= plen:
+                self._prefill_queue.popleft()
+                self._live[slot] = True
+                req.state = RequestState.DECODE
+                self._emit(req, int(tok_dev))
+        return ran
+
+    def decode_widths(self) -> List[int]:
+        """The active block-table widths paged decode can run at (the
+        power-of-two ladder, capped at ``max_pages``) — one decode compile
+        each."""
+        if not self.paged:
+            return []
+        out, w = [], 1
+        while w < self.cache.max_pages:
+            out.append(w)
+            w *= 2
+        out.append(self.cache.max_pages)
+        return out
+
+    def warmup(self) -> None:
+        """Pre-compile the paged decode program at every active-width rung
+        so steady-state serving never pauses for a mid-stream compile (the
+        width grows with the deepest live sequence). Results are discarded;
+        engine state is untouched. No-op for the dense engine (one decode
+        shape, compiled on first step)."""
+        for w in self.decode_widths():
+            self._decode_paged(self.params, self.cache.caches, self._dev,
+                               jnp.zeros((self.n_slots, w), jnp.int32),
+                               jnp.zeros((self.n_slots,), bool))
+
+    def _live_mask_dev(self) -> jax.Array:
+        """Device copy of the liveness mask, re-uploaded only when slot
+        liveness actually changed (admission/finish), not every step."""
+        if self._live_dev is None or not np.array_equal(
+                self._live_dev[1], self._live):
+            self._live_dev = (jnp.asarray(self._live), self._live.copy())
+        return self._live_dev[0]
+
+    def _block_tables_dev(self, width: int) -> jax.Array:
+        """Device copy of the first ``width`` block-table columns (cached
+        per width; all widths invalidate together when the host table
+        changes)."""
+        if self.cache.dirty:
+            self._bt_dev = {}
+            self.cache.dirty = False
+        if width not in self._bt_dev:
+            self._bt_dev[width] = jnp.asarray(
+                self.cache.block_tables[:, :width])
+        return self._bt_dev[width]
+
     def _emit(self, req: Request, tok: int) -> None:
         """Record one generated token; finish the request if it stops."""
         req.generated.append(tok)
@@ -149,28 +331,86 @@ class Engine:
             self.scheduler.finish(req)
             self.metrics.on_done(req.id)
             if slot is not None:
+                if self.paged:
+                    self.cache.free_slot(slot)
                 self._live[slot] = False
                 if req.sampling.temperature > 0:
                     self._dev = self._clear_slot(
                         self._dev, jnp.asarray(slot, jnp.int32))
 
+    def _kv_len(self, req: Request) -> int:
+        """Cached KV depth for a live request: the whole prompt plus every
+        generated token except the newest (written next decode step)."""
+        return len(req.prompt) + max(len(req.generated) - 1, 0)
+
+    def _report_kv(self) -> None:
+        logical = sum(self._kv_len(r) for r in self.scheduler.running.values()
+                      if r.state == RequestState.DECODE)
+        if self.paged:
+            self.metrics.on_kv(self.cache.kv_bytes_allocated(),
+                               int(logical * self.cache.token_bytes),
+                               self.cache.dense_reserved_bytes)
+        else:
+            self.metrics.on_kv(self.cache.kv_bytes,
+                               int(logical * self.cache.token_bytes),
+                               self.cache.kv_bytes)
+
     def step(self) -> bool:
-        """One engine iteration: admit into free slots, then one batched
-        decode of all live slots. Returns True if any work was done."""
-        admitted = self.scheduler.admit()
-        for req, slot in admitted:
-            self._admit_one(req, slot)
+        """One engine iteration: admit into free slots, (paged) run prefill
+        chunks under the token budget, then one batched decode of all live
+        slots. Returns True if any work was done."""
+        if self.paged:
+            # one at a time: each admission consumes pages, and the pool
+            # predicate for the next queue head must see that
+            admitted = []
+            while True:
+                pairs = self.scheduler.admit(
+                    can_admit=lambda r: self.cache.can_admit(
+                        len(r.prompt), r.max_new_tokens, prompt=r.prompt),
+                    max_n=1)
+                if not pairs:
+                    break
+                self._admit_one_paged(*pairs[0])
+                admitted += pairs
+            prefilled = self._prefill_chunks()
+        else:
+            admitted = self.scheduler.admit()
+            for req, slot in admitted:
+                self._admit_one(req, slot)
+            prefilled = False
         self.step_count += 1
 
         if not self._live.any():
             self.metrics.on_step(0, self.n_slots)
-            return bool(admitted)
+            self._report_kv()
+            return bool(admitted) or prefilled
 
-        self._dev, self.cache.caches = self._decode(
-            self.params, self.cache.caches, self._dev)
+        if self.paged:
+            # materialize this step's write pages and size the active
+            # block-table width to the deepest live sequence
+            needed = 1
+            for slot in np.nonzero(self._live)[0]:
+                req = self.scheduler.running.get(int(slot))
+                if req is None:
+                    continue
+                wpos = self._kv_len(req)
+                self.cache.ensure_decode_page(int(slot), wpos)
+                needed = max(needed, self.cache.pages_used(int(slot),
+                                                           wpos + 1))
+            width = min(_next_pow2(needed), self.cache.max_pages)
+            bt = self._block_tables_dev(width)
+            # live mask is load-bearing: mid-prefill slots hold real block
+            # tables + carried state that an unmasked decode would corrupt
+            self._dev, self.cache.caches = self._decode_paged(
+                self.params, self.cache.caches, self._dev, bt,
+                self._live_mask_dev())
+        else:
+            self._dev, self.cache.caches = self._decode(
+                self.params, self.cache.caches, self._dev)
         next_np = np.asarray(self._dev["tokens"])
 
         self.metrics.on_step(int(self._live.sum()), self.n_slots)
+        self._report_kv()
         for slot in np.nonzero(self._live)[0]:
             req = self.scheduler.running.get(int(slot))
             if req is None:

@@ -37,6 +37,20 @@ class RequestMetrics:
         dt = self.t_done - self.t_first_token
         return (self.n_generated - 1) / dt if dt > 0 else float("inf")
 
+    @property
+    def queue_wait(self) -> Optional[float]:
+        """Submit -> admission (slot + memory became available)."""
+        if self.t_admit is None:
+            return None
+        return self.t_admit - self.t_submit
+
+    @property
+    def e2e_latency(self) -> Optional[float]:
+        """Submit -> last token."""
+        if self.t_done is None:
+            return None
+        return self.t_done - self.t_submit
+
 
 class ServeMetrics:
     def __init__(self, clock: Callable[[], float] = time.perf_counter):
@@ -45,6 +59,10 @@ class ServeMetrics:
         self.t_start: Optional[float] = None
         self.t_last: Optional[float] = None
         self._occupancy: List[float] = []     # live-slot fraction per step
+        self.prefill_tokens_computed = 0      # excludes prefix-reused tokens
+        self.kv_bytes_reserved = 0            # dense n_slots*max_len equiv
+        self.kv_bytes_allocated_peak = 0
+        self.kv_bytes_logical_peak = 0
 
     # ---------------------------------------------------------------- events
     def on_submit(self, req_id: int, n_prompt: int,
@@ -72,10 +90,29 @@ class ServeMetrics:
     def on_step(self, n_live: int, n_slots: int) -> None:
         self._occupancy.append(n_live / max(n_slots, 1))
 
+    def on_prefill_tokens(self, n: int) -> None:
+        self.prefill_tokens_computed += n
+
+    def on_kv(self, allocated_bytes: int, logical_bytes: int,
+              reserved_bytes: int) -> None:
+        """KV-memory snapshot for one step. ``allocated`` is what the cache
+        actually holds (paged: pages in use; dense: the full reservation);
+        ``logical`` is live-sequence depth × bytes/token — with prefix
+        sharing it can exceed ``allocated``; ``reserved`` is the dense
+        ``n_slots × max_len`` equivalent. Peaks are kept."""
+        self.kv_bytes_reserved = reserved_bytes
+        self.kv_bytes_allocated_peak = max(self.kv_bytes_allocated_peak,
+                                           allocated_bytes)
+        self.kv_bytes_logical_peak = max(self.kv_bytes_logical_peak,
+                                         logical_bytes)
+
     # --------------------------------------------------------------- summary
     def summary(self) -> Dict[str, float]:
         done = [m for m in self.requests.values() if m.t_done is not None]
         ttfts = sorted(m.ttft for m in done if m.ttft is not None)
+        waits = sorted(m.queue_wait for m in done if m.queue_wait is not None)
+        e2es = sorted(m.e2e_latency for m in done
+                      if m.e2e_latency is not None)
         total_tokens = sum(m.n_generated for m in done)
         elapsed = ((self.t_last - self.t_start)
                    if done and self.t_start is not None else 0.0)
@@ -95,6 +132,14 @@ class ServeMetrics:
             "ttft_mean_s": sum(ttfts) / len(ttfts) if ttfts else 0.0,
             "ttft_p50_s": pct(ttfts, 0.50),
             "ttft_p95_s": pct(ttfts, 0.95),
+            "queue_wait_p50_s": pct(waits, 0.50),
+            "queue_wait_p95_s": pct(waits, 0.95),
+            "e2e_p50_s": pct(e2es, 0.50),
+            "e2e_p95_s": pct(e2es, 0.95),
             "occupancy_mean": (sum(self._occupancy) / len(self._occupancy)
                                if self._occupancy else 0.0),
+            "prefill_tokens_computed": self.prefill_tokens_computed,
+            "kv_bytes_reserved": self.kv_bytes_reserved,
+            "kv_bytes_allocated_peak": self.kv_bytes_allocated_peak,
+            "kv_bytes_logical_peak": self.kv_bytes_logical_peak,
         }

@@ -2,10 +2,15 @@
 
 A :class:`Request` moves WAITING -> PREFILL -> DECODE -> DONE. The
 scheduler owns the waiting queue and the slot free-list; admission is
-strict FCFS into free slots. Prompts are right-padded to a *bucket* length
-(powers of two between ``min_bucket`` and ``max_len``) so the jitted
-prefill compiles once per bucket, not once per prompt length — the
-engine's jit-stable-shapes contract.
+strict FCFS into free slots. In the slot-dense engine prompts are
+right-padded to a *bucket* length (powers of two between ``min_bucket``
+and ``max_len``) so the jitted prefill compiles once per bucket, not once
+per prompt length — the engine's jit-stable-shapes contract. The paged
+engine (``strict_buckets=False``) replaces buckets with fixed-shape
+prefill *chunks*: any prompt with ``prompt + max_new_tokens <= max_len``
+is admittable (no largest-bucket rejection), and admission can
+additionally be gated by a ``can_admit`` predicate (page-pool pressure) —
+strict FCFS still holds: a blocked queue head blocks everyone behind it.
 """
 
 from __future__ import annotations
@@ -13,7 +18,7 @@ from __future__ import annotations
 import collections
 import dataclasses
 import enum
-from typing import Deque, List, Optional, Sequence, Tuple
+from typing import Callable, Deque, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -42,6 +47,10 @@ class Request:
     state: RequestState = RequestState.WAITING
     slot: Optional[int] = None
     generated: List[int] = dataclasses.field(default_factory=list)
+    # paged-engine prefill progress: tokens already in cache (trie-matched
+    # prefix + completed chunks) / tokens skipped via prefix reuse
+    prefill_pos: int = 0
+    n_matched: int = 0
 
     def __post_init__(self):
         self.prompt = np.asarray(self.prompt, np.int32).reshape(-1)
@@ -67,9 +76,11 @@ class Scheduler:
     step; the scheduler never touches device state."""
 
     def __init__(self, n_slots: int, max_len: int, min_bucket: int = 16,
-                 buckets: Optional[Sequence[int]] = None):
+                 buckets: Optional[Sequence[int]] = None,
+                 strict_buckets: bool = True):
         self.n_slots = n_slots
         self.max_len = max_len
+        self.strict_buckets = strict_buckets
         self.buckets = tuple(sorted(buckets)) if buckets else \
             make_buckets(min_bucket, max_len)
         self.waiting: Deque[Request] = collections.deque()
@@ -83,15 +94,19 @@ class Scheduler:
             raise ValueError(
                 f"request {req.id}: prompt({len(req.prompt)}) + "
                 f"max_new_tokens({req.max_new_tokens}) > max_len({self.max_len})")
-        if len(req.prompt) > self.buckets[-1]:
+        if self.strict_buckets and len(req.prompt) > self.buckets[-1]:
             # reject before a slot is consumed — failing later, mid-admission,
-            # would leak the assigned slot and wedge the engine
+            # would leak the assigned slot and wedge the engine. The paged
+            # engine (strict_buckets=False) has no bucket ceiling: long
+            # prompts run as a sequence of fixed-shape chunks.
             raise ValueError(
                 f"request {req.id}: prompt({len(req.prompt)}) exceeds the "
                 f"largest prompt bucket ({self.buckets[-1]})")
         req.state = RequestState.WAITING
         req.slot = None
         req.generated = []          # reset runtime fields: resubmit == fresh
+        req.prefill_pos = 0
+        req.n_matched = 0
         self.waiting.append(req)
 
     def bucket_len(self, prompt_len: int) -> int:
@@ -111,12 +126,23 @@ class Scheduler:
         padded[0, :n] = req.prompt
         return padded, n
 
-    def admit(self) -> List[Tuple[Request, int]]:
-        """FCFS: pop waiting requests into free slots (lowest slot first)."""
+    def admit(self, can_admit: Optional[Callable[[Request], bool]] = None,
+              max_n: Optional[int] = None) -> List[Tuple[Request, int]]:
+        """FCFS: pop waiting requests into free slots (lowest slot first).
+        ``can_admit`` (paged engine: page-pool pressure) gates the queue
+        head — a blocked head blocks everyone behind it, keeping admission
+        order stable regardless of which slots freed when. The paged
+        engine passes ``max_n=1`` and re-checks between admissions, since
+        each admission consumes pages the predicate must see."""
         out = []
         self.free_slots.sort()
         while self.waiting and self.free_slots:
-            req = self.waiting.popleft()
+            if max_n is not None and len(out) >= max_n:
+                break
+            req = self.waiting[0]
+            if can_admit is not None and not can_admit(req):
+                break
+            self.waiting.popleft()
             slot = self.free_slots.pop(0)
             req.state = RequestState.PREFILL
             req.slot = slot
@@ -130,6 +156,13 @@ class Scheduler:
             self.running.pop(req.slot, None)
             self.free_slots.append(req.slot)
             req.slot = None
+        else:
+            # cancelling a never-admitted request must pull it out of the
+            # waiting queue, or a later admit() would resurrect it
+            try:
+                self.waiting.remove(req)
+            except ValueError:
+                pass
 
     # --------------------------------------------------------------- queries
     @property

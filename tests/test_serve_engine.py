@@ -17,8 +17,8 @@ import pytest
 
 from repro.configs import common
 from repro.models import ModelConfig, build
-from repro.serve import (Engine, Request, SamplingParams, Scheduler,
-                         make_buckets, sample)
+from repro.serve import (Engine, Request, RequestState, SamplingParams,
+                         Scheduler, make_buckets, sample)
 
 MAMBA = ModelConfig(name="mamba-tiny", n_layers=2, d_model=64, n_heads=4,
                     n_kv_heads=4, d_ff=128, vocab=96, pattern=("mamba",),
@@ -271,3 +271,86 @@ def test_buckets_and_admission():
     with pytest.raises(ValueError):           # rejected before slot assignment
         s2.submit(Request(id=10, prompt=np.zeros(40, np.int32),
                           max_new_tokens=8))
+    # paged mode (strict_buckets=False) has no bucket ceiling
+    s3 = Scheduler(n_slots=2, max_len=64, buckets=[16, 32],
+                   strict_buckets=False)
+    s3.submit(Request(id=11, prompt=np.zeros(40, np.int32), max_new_tokens=8))
+    with pytest.raises(ValueError):           # max_len still caps the total
+        s3.submit(Request(id=12, prompt=np.zeros(60, np.int32),
+                          max_new_tokens=8))
+
+
+# -------------------------------------------------- scheduler lifecycle edges
+
+def _reqs(n, start_id=0):
+    return [Request(id=start_id + i, prompt=np.arange(4) + 1,
+                    max_new_tokens=2) for i in range(n)]
+
+
+def test_finish_never_admitted_request():
+    """Cancelling a queued (never-admitted) request must remove it from the
+    waiting queue — a later admit() must not resurrect it — and must not
+    corrupt the slot free-list."""
+    s = Scheduler(n_slots=1, max_len=64)
+    a, b, c = _reqs(3)
+    for r in (a, b, c):
+        s.submit(r)
+    [(first, slot0)] = s.admit()              # a takes the only slot
+    assert first is a and slot0 == 0
+    s.finish(b)                               # cancel b while still waiting
+    assert b.state == RequestState.DONE
+    assert len(s.free_slots) == 0             # b never held a slot
+    s.finish(a)
+    assert [(q.id, sl) for q, sl in s.admit()] == [(c.id, 0)]  # b skipped
+    assert not s.waiting
+    s.finish(c)
+    assert not s.has_work()
+
+
+def test_resubmit_finished_request_resets_runtime_fields():
+    """A finished request resubmitted (retry) must start from a clean
+    slate: state, slot, generated, and paged prefill progress all reset."""
+    s = Scheduler(n_slots=1, max_len=64)
+    r = _reqs(1)[0]
+    s.submit(r)
+    s.admit()
+    r.generated += [7, 8]
+    r.prefill_pos, r.n_matched = 4, 4
+    s.finish(r)
+    assert r.state == RequestState.DONE and r.slot is None
+    s.submit(r)
+    assert r.state == RequestState.WAITING
+    assert r.generated == [] and r.slot is None
+    assert r.prefill_pos == 0 and r.n_matched == 0
+    [(again, slot)] = s.admit()
+    assert again is r and slot == 0
+
+
+def test_admission_order_stable_when_slots_free_out_of_order():
+    """Slots released in arbitrary order must not perturb FCFS: waiting
+    requests land in submission order, into the lowest free slot."""
+    s = Scheduler(n_slots=3, max_len=64)
+    first = _reqs(3)
+    for r in first:
+        s.submit(r)
+    admitted = dict((q.id, sl) for q, sl in s.admit())
+    assert admitted == {0: 0, 1: 1, 2: 2}
+    later = _reqs(3, start_id=10)
+    for r in later:
+        s.submit(r)
+    # free slots out of order: 2 first, then 0 — admission order must stay
+    # 10, 11 (FCFS), slots lowest-first (2 then... 0 joins later)
+    s.finish(first[2])
+    assert [(q.id, sl) for q, sl in s.admit()] == [(10, 2)]
+    s.finish(first[0])
+    s.finish(first[1])
+    assert [(q.id, sl) for q, sl in s.admit()] == [(11, 0), (12, 1)]
+    # max_n caps a single admit() round (paged engines re-check the pool
+    # between admissions)
+    for r in list(s.running.values()):
+        s.finish(r)
+    more = _reqs(2, start_id=20)
+    for r in more:
+        s.submit(r)
+    assert len(s.admit(max_n=1)) == 1
+    assert len(s.admit(max_n=1)) == 1
