@@ -15,6 +15,10 @@ Prints ``name,value,derived`` CSV rows. Sections:
   * paged,*    — paged vs slot-dense serving: KV bytes allocated vs dense
                  reservation, decode tok/s, prefix-reuse savings
                  (BENCH_paged.json)
+  * spec,*     — speculative decoding with the MPD-folded int8 draft:
+                 decode tok/s vs the non-spec paged baseline, draft
+                 acceptance, tokens/step, shared-trie prefix reuse
+                 (BENCH_spec.json)
   * roofline,* — per-cell roofline terms from the dry-run sweep (if present)
 
 ``--fast`` trims step counts for CI-style runs; the full run reproduces the
@@ -33,7 +37,7 @@ def main() -> None:
     ap.add_argument("--skip-roofline", action="store_true")
     ap.add_argument("--sections", default="",
                     help="comma list: table1,fig4,fig5,speedup,kernels,"
-                         "serve,fused,quant,paged,roofline")
+                         "serve,fused,quant,paged,spec,roofline")
     args = ap.parse_args()
     want = set(args.sections.split(",")) if args.sections else None
 
@@ -69,6 +73,9 @@ def main() -> None:
     if on("paged"):
         from benchmarks import paged_bench
         rows += paged_bench.rows(smoke=args.fast)
+    if on("spec"):
+        from benchmarks import spec_bench
+        rows += spec_bench.rows(smoke=args.fast)
     for r in rows:
         print(r)
 

@@ -172,6 +172,10 @@ def bench(*, smoke=True, seed=0, out="BENCH_serve.json", trials=3):
                     "makespan_s": round(makespan, 3)}
                 if summary is not None:      # engine modes carry full metrics
                     row.update({
+                        "tokens_per_step":
+                            round(summary["tokens_per_step_mean"], 3),
+                        "draft_acceptance_rate":
+                            round(summary["draft_acceptance_rate"], 3),
                         "queue_wait_p50_s": round(summary["queue_wait_p50_s"], 4),
                         "queue_wait_p95_s": round(summary["queue_wait_p95_s"], 4),
                         "e2e_p50_s": round(summary["e2e_p50_s"], 4),
@@ -200,6 +204,9 @@ def rows(smoke=True, out="BENCH_serve.json"):
                          f"{round(r['queue_wait_p95_s']*1e3, 1)}")
             lines.append(f"serve,{tag}_e2e_p95_ms,"
                          f"{round(r['e2e_p95_s']*1e3, 1)}")
+            # 1.0 without speculation; the spec bench drives this above 1
+            lines.append(f"serve,{tag}_tokens_per_step,"
+                         f"{r['tokens_per_step']}")
     return lines
 
 

@@ -8,7 +8,7 @@ install steps:
    when pytest is invoked with a config override.
 2. **hypothesis fallback** — the property tests use a small slice of
    hypothesis (``given`` / ``settings`` / ``integers`` / ``sampled_from`` /
-   ``composite``). When the real library is missing (it is an optional
+   ``composite`` / ``lists`` / ``tuples``). When the real library is missing (it is an optional
    ``test`` extra), a deterministic miniature implementation is installed in
    ``sys.modules`` *before* test modules import: each ``@given`` test runs
    ``max_examples`` times with seeds derived from the example index. No
@@ -83,6 +83,15 @@ def _install_hypothesis_fallback():
             return _Strategy(sample)
         return build
 
+    def lists(elements, min_size=0, max_size=10):
+        def sample(rng):
+            n = int(rng.integers(min_size, max_size + 1))
+            return [elements.sample(rng) for _ in range(n)]
+        return _Strategy(sample)
+
+    def tuples(*elements):
+        return _Strategy(lambda rng: tuple(e.sample(rng) for e in elements))
+
     def settings(**kwargs):
         def deco(fn):
             fn._mini_hypothesis_settings = dict(kwargs)
@@ -115,6 +124,8 @@ def _install_hypothesis_fallback():
     st_mod.booleans = booleans
     st_mod.floats = floats
     st_mod.composite = composite
+    st_mod.lists = lists
+    st_mod.tuples = tuples
 
     h_mod = types.ModuleType("hypothesis")
     h_mod.given = given

@@ -4,8 +4,8 @@ FUNCTIONS, not module constants — importing this module never touches jax
 device state (device count is locked at first backend init, and the dry-run
 needs to set XLA_FLAGS before that happens).
 
-``repro.launch.mesh`` re-exports these for backward compatibility; new code
-should import from ``repro.dist``.
+Import from ``repro.dist`` (the ``repro.launch.mesh`` re-export shim is
+gone).
 """
 
 from __future__ import annotations

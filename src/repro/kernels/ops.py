@@ -353,3 +353,19 @@ def paged_attention(q, k_pages, v_pages, block_tables, lengths):
     return paged_attn_kernel.paged_attention(
         q, k_pages, v_pages, block_tables, lengths,
         interpret=(_BACKEND == "interpret"))
+
+
+def paged_attention_verify(q, k_pages, v_pages, block_tables, lengths):
+    """Speculative-verify attention: a ``(B, Tq, H, Dh)`` window of query
+    positions per row against the paged KV pool, causally masked inside the
+    window (``lengths`` is the depth at the last window position). The jnp
+    oracle keeps the decode path's contraction order so greedy verification
+    reproduces decode argmax; the Pallas route folds the window into the
+    GQA group axis of the streaming kernel. Inference-only — no custom VJP.
+    """
+    if _BACKEND == "jnp":
+        return ref.paged_attention_verify_ref(q, k_pages, v_pages,
+                                              block_tables, lengths)
+    return paged_attn_kernel.paged_attention_verify(
+        q, k_pages, v_pages, block_tables, lengths,
+        interpret=(_BACKEND == "interpret"))

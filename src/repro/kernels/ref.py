@@ -153,6 +153,42 @@ def paged_attention_ref(q, k_pages, v_pages, block_tables, lengths):
     return o.reshape(B, 1, H, Dh)[:, 0]
 
 
+def paged_attention_verify_ref(q, k_pages, v_pages, block_tables, lengths):
+    """Paged-attention *verify* oracle: a short window of ``Tq`` query
+    positions per row against the paged pool (speculative decoding's
+    draft-window verification).
+
+    Query ``t`` (0-indexed within the window) sits at absolute position
+    ``lengths[b] - Tq + t`` and attends to ``kv_pos < lengths[b] - (Tq-1-t)``
+    — the cached context plus the window tokens up to and including itself
+    (the window's K/V are scattered into the pool before this is called,
+    exactly like the decode step). With ``Tq == 1`` this is
+    :func:`paged_attention_ref` verbatim; the contraction order, f32
+    softmax, and ``-1e30`` masking are identical, so greedy verification
+    reproduces the decode path's argmax.
+
+    ``q: (B, Tq, H, Dh)``; ``lengths: (B,)`` valid KV depth at the *last*
+    query. Returns ``(B, Tq, H, Dh)``.
+    """
+    B, Tq, H, Dh = q.shape
+    _, page_size, n_kv, _ = k_pages.shape
+    P = block_tables.shape[1]
+    k = k_pages[block_tables].reshape(B, P * page_size, n_kv, Dh)
+    v = v_pages[block_tables].reshape(B, P * page_size, n_kv, Dh)
+    g = H // n_kv
+    q5 = q.reshape(B, Tq, n_kv, g, Dh)
+    logits = jnp.einsum("bqkgd,bskd->bkgqs", q5,
+                        k.astype(q.dtype)).astype(jnp.float32)
+    logits *= Dh ** -0.5
+    kv_pos = jnp.arange(P * page_size)
+    per_q_len = lengths[:, None] - (Tq - 1 - jnp.arange(Tq))[None, :]
+    valid = kv_pos[None, None, :] < per_q_len[:, :, None]      # (B, Tq, S)
+    logits = jnp.where(valid[:, None, None, :, :], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", p.astype(q.dtype), v.astype(q.dtype))
+    return o.reshape(B, Tq, H, Dh)
+
+
 def fused_ffn_quant_ref(x, w_up, w_down, w_gate=None, b_up=None, b_gate=None,
                         b_down=None, s_up=None, s_gate=None, s_down=None,
                         activation: Optional[str] = "silu", precision=None):

@@ -35,8 +35,8 @@ import jax
 import numpy as np
 
 from repro.configs.common import ARCHS, SHAPES, cell_status, get_config
+from repro.dist import mesh as mesh_lib
 from repro.launch import hlo as hlo_lib
-from repro.launch import mesh as mesh_lib
 from repro.launch import specs as specs_lib
 
 

@@ -10,6 +10,13 @@ page pool + block tables + prefix-reuse trie + chunked prefill; see
 ``repro.serve.cache.PagedCache``) and reports page-level KV accounting
 next to the latency percentiles.
 
+``--spec-draft <dir>`` (paged only) turns on speculative decoding: the
+packed export in ``<dir>`` — typically the target's own MPD-folded int8
+artifact — proposes ``--spec-k`` tokens per step against its own page
+pool, and the target verifies the whole window in one dispatch. Greedy
+output stays token-identical to plain decode; temperature > 0 uses
+rejection sampling. Recurrent archs fall back to the plain loop.
+
 ``--static`` keeps the legacy path: prefill one fixed batch, decode it in
 lockstep (no admission, no per-request stop) — the baseline the engine is
 benchmarked against in ``benchmarks/serve_bench.py``.
@@ -115,16 +122,43 @@ def serve_stream(engine, requests, *, idle_sleep=0.0005):
     return engine.metrics.summary()
 
 
+def _load_spec_draft(args):
+    """Deploy the draft model for speculative decoding from a packed
+    export directory — typically the target's own MPD-folded (optionally
+    int8) artifact, i.e. compression paying a second time as a draft."""
+    from repro.checkpoint import checkpoint as ckpt_lib
+
+    if not ckpt_lib.has_packed(args.spec_draft):
+        raise SystemExit(
+            f"--spec-draft needs a packed export under {args.spec_draft} "
+            "(write one with `train --fold-to-packed` or export_packed)")
+    draft, draft_params = ckpt_lib.load_packed(args.spec_draft)
+    q = getattr(draft, "quant_report", None)
+    print(f"spec draft: packed export from {args.spec_draft}/packed"
+          + (f" (quantized, {q['bits']}-bit)" if q else "")
+          + f", k={args.spec_k}")
+    return draft, draft_params
+
+
 def _continuous_main(args, cfg, model, params):
     from repro.serve import Engine
 
     max_len = args.prompt_len + args.gen
+    if args.spec_draft and not args.paged:
+        raise SystemExit("--spec-draft requires --paged (the verify window "
+                         "scatters into paged KV)")
     if args.paged:
+        spec_draft = _load_spec_draft(args) if args.spec_draft else None
         engine = Engine(model, params, n_slots=args.slots, max_len=max_len,
                         paged=True, page_size=args.page_size,
                         n_pages=args.pages or None,
-                        prefill_chunk_tokens=args.prefill_chunk or None)
-        mode = "paged"
+                        prefill_chunk_tokens=args.prefill_chunk or None,
+                        spec_draft=spec_draft, spec_k=args.spec_k)
+        mode = "paged+spec" if engine.spec_active else "paged"
+        if spec_draft is not None and not engine.spec_active:
+            print("note: recurrent blocks cannot re-score a token window — "
+                  "speculative decoding disabled, using the plain decode "
+                  "loop")
     else:
         engine = Engine(model, params, n_slots=args.slots, max_len=max_len)
         mode = "continuous"
@@ -149,6 +183,11 @@ def _continuous_main(args, cfg, model, params):
               f" vs dense reservation {summary['kv_bytes_reserved']/1e6:.2f} "
               f"MB; prefill tokens computed {engine.n_prefill_tokens} "
               f"(+{engine.n_prefill_tokens_skipped} reused via prefix cache)")
+        if engine.spec_active:
+            print(f"spec decode: k={engine.spec_k}, "
+                  f"{summary['tokens_per_step_mean']:.2f} tokens/step, "
+                  f"{summary['draft_acceptance_rate']*100:.0f}% draft "
+                  f"acceptance")
 
 
 def _restore_latest(ckpt_dir, params, tag=""):
@@ -264,6 +303,12 @@ def main(argv=None):
     p.add_argument("--prefill-chunk", type=int, default=0,
                    help="paged-mode prefill chunk tokens (page multiple); "
                    "0 = 4 pages")
+    p.add_argument("--spec-draft", default="",
+                   help="speculative decoding (requires --paged): directory "
+                   "with a packed export to deploy as the draft model — "
+                   "typically the target's own MPD-folded int8 artifact")
+    p.add_argument("--spec-k", type=int, default=4,
+                   help="draft tokens proposed per verify window")
     p.add_argument("--seed", type=int, default=0)
     p.add_argument("--mpd-c", type=int, default=0, help="0 = config default")
     p.add_argument("--mpd-fuse", action="store_true",

@@ -24,7 +24,7 @@ from repro.dist import sharding as sh
 from repro.dist import microbatch as mb_lib
 from repro.models.model import Model, ModelConfig, build
 from repro.optim import OptConfig, optimizer as opt_lib
-from . import mesh as mesh_lib
+from repro.dist import mesh as mesh_lib
 
 SDS = jax.ShapeDtypeStruct
 

@@ -302,6 +302,50 @@ def apply_decode_paged(spec: AttentionSpec, params, x, cache, block_tables,
     return y, {"kp": kp, "vp": vp, "pos": new_pos}
 
 
+def apply_verify_paged(spec: AttentionSpec, params, x, cache, block_tables,
+                       live=None):
+    """Speculative-verify window against the paged KV pool. x: (B, Tq, D).
+
+    The window's ``Tq`` tokens sit at absolute positions ``pos .. pos+Tq-1``
+    where ``pos = cache["pos"]`` (B,) is the *accepted* depth — the engine
+    sets it host-authoritatively before each spec step, which is also what
+    makes rollback free: rejected tokens are simply re-scattered over next
+    step. Each window token's K/V is scattered to its ``(page, offset)``
+    (non-live rows to the null page, same aliasing argument as
+    :func:`apply_decode_paged`), then all ``Tq`` queries attend in one
+    :func:`repro.kernels.ops.paged_attention_verify` dispatch, causally
+    masked inside the window. Returns ``pos`` UNCHANGED — in spec mode the
+    host owns the depth (the engine learns the accepted count and rolls
+    forward/back itself).
+    """
+    from repro.kernels import ops
+
+    B, Tq, _ = x.shape
+    kp, vp = cache["kp"], cache["vp"]
+    page_size = kp.shape[1]
+    P = block_tables.shape[1]
+    pos = cache["pos"]                                        # (B,)
+    pos_bt = pos[:, None] + jnp.arange(Tq)[None, :]           # (B, Tq)
+    if spec.rope == "mrope":
+        positions = jnp.stack([pos_bt, pos_bt, pos_bt])
+    else:
+        positions = pos_bt
+    q, k_new, v_new = _qkv(spec, params, x, positions)
+    pidx = jnp.clip(pos_bt // page_size, 0, P - 1)            # (B, Tq)
+    pages = jnp.take_along_axis(block_tables, pidx, axis=1)   # (B, Tq)
+    if live is not None:
+        pages = jnp.where(live[:, None], pages, 0)            # -> null page
+    offs = pos_bt % page_size
+    kp = kp.at[pages, offs].set(k_new.astype(kp.dtype))
+    vp = vp.at[pages, offs].set(v_new.astype(vp.dtype))
+    o = ops.paged_attention_verify(q, kp.astype(q.dtype), vp.astype(q.dtype),
+                                   block_tables, pos + Tq)
+    o = shard(o, "batch", None, "heads", None)
+    y = spec.wo.apply(params["wo"],
+                      o.reshape(B, Tq, spec.n_heads * spec.head_dim))
+    return y, {"kp": kp, "vp": vp, "pos": pos}
+
+
 def prefill_chunk_paged(spec: AttentionSpec, params, x, cache, bt_row, slot,
                         start, chunk_len):
     """One page-aligned prefill chunk of a single request (batch 1).

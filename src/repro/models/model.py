@@ -493,6 +493,68 @@ class Model:
         lg = self.unembed.apply(params["unembed"], x[:, 0])
         return lg, new_caches
 
+    @property
+    def spec_decode_supported(self) -> bool:
+        """Speculative decoding needs cheap per-position rollback, which the
+        paged KV cache gives attention for free (truncate the block table)
+        but recurrent state (mamba/rwkv) does not — those archs fall back
+        to the one-token decode loop."""
+        return all(s["kind"] in ("attn", "attn_moe") for s in self.block_specs)
+
+    def set_paged_pos(self, caches, pos):
+        """Overwrite every attention layer's paged-cache ``pos`` leaf with
+        the host-authoritative depth ``pos`` (B,). Spec-mode entry point:
+        the engine owns the accepted depth, so propose/verify programs set
+        it explicitly instead of trusting device-side accumulation — which
+        is also what makes rollback free (rejected positions are simply
+        re-scattered under the corrected depth next step)."""
+        out = []
+        for spec, c in zip(self.block_specs, caches):
+            if spec["kind"] in ("attn", "attn_moe"):
+                c = dict(c)
+                c["pos"] = jnp.broadcast_to(
+                    pos[None].astype(c["pos"].dtype), c["pos"].shape)
+            out.append(c)
+        return out
+
+    def verify_step(self, params, tokens, caches, block_tables, live=None):
+        """Speculative-verify window: score ``tokens`` (B, Tq) — the pending
+        token plus the draft's k proposals — against the paged KV pool in
+        ONE dispatch. ``logits[:, i]`` is the target's prediction for the
+        token *after* window position ``i``, exactly what
+        :meth:`decode_step` would have produced had the window been fed one
+        token at a time (same contraction order on the jnp route).
+
+        Attention archs only (see :attr:`spec_decode_supported`); callers
+        set the accepted depth first via :meth:`set_paged_pos`. Returns
+        ``(logits (B, Tq, vocab), new caches)``; cache ``pos`` leaves are
+        left at the entry depth — the host decides how far to advance.
+        """
+        assert self.spec_decode_supported, \
+            "verify_step: recurrent archs cannot roll state back"
+        cfg = self.cfg
+        x = layers.embed(params["embed"], tokens) * float(np.sqrt(cfg.d_model))
+        new_caches = []
+        for spec, pstack, cstack in zip(self.block_specs, params["blocks"],
+                                        caches):
+            def body(x, pc, spec=spec):
+                p, c = pc
+                h = layers.apply_norm(cfg.norm, p["norm1"], x)
+                y, c2 = attn_lib.apply_verify_paged(
+                    spec["mixer"], p["mixer"], h, c, block_tables, live=live)
+                x = x + y
+                h2 = layers.apply_norm(cfg.norm, p["norm2"], x)
+                if spec["kind"].endswith("_moe"):
+                    y2, _ = spec["ffn"].apply(p["ffn"], h2)
+                else:
+                    y2 = spec["ffn"].apply(p["ffn"], h2)
+                return x + y2, c2
+            x, c_new = jax.lax.scan(body, x, (pstack, cstack))
+            new_caches.append(c_new)
+        x = layers.apply_norm(cfg.norm, params["final_norm"], x)
+        lg = self.unembed.apply(params["unembed"], x)
+        return lg, new_caches
+
     def prefill_chunk(self, params, tokens, caches, bt_row, slot, start,
                       chunk_len):
         """One page-aligned chunk of a single request's prefill (batch 1),

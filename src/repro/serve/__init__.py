@@ -7,17 +7,23 @@ logical-axis rules. Two memory models (see ``engine.Engine``): slot-dense
 (``SlotCache`` — per-slot ``max_len`` reservation, bucketed one-shot
 prefill) and paged (``PagedCache`` — global KV page pool, block tables,
 ref-counted prefix reuse, chunked prefill, paged-attention decode).
+Speculative decoding (``Engine(..., spec_draft=(model, params))``) rides
+on the paged model: a draft proposes k tokens against its own page pool,
+the target verifies the window in one dispatch, and draft+target share
+one prefix trie.
 """
 
-from .cache import PagedCache, PagePool, PrefixTrie, SlotCache
+from .cache import (PagedCache, PagePool, PrefixTrie, SlotCache,
+                    publish_prefix_shared, share_trie)
 from .engine import Engine
 from .metrics import RequestMetrics, ServeMetrics
-from .sampling import SamplingParams, sample
+from .sampling import SamplingParams, sample, spec_accept
 from .scheduler import Request, RequestState, Scheduler, make_buckets
 
 __all__ = [
     "Engine", "SlotCache", "PagedCache", "PagePool", "PrefixTrie",
+    "share_trie", "publish_prefix_shared",
     "ServeMetrics", "RequestMetrics",
-    "SamplingParams", "sample", "Request", "RequestState", "Scheduler",
-    "make_buckets",
+    "SamplingParams", "sample", "spec_accept", "Request", "RequestState",
+    "Scheduler", "make_buckets",
 ]

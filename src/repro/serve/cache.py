@@ -179,15 +179,33 @@ class PrefixTrie:
     deep chain — which is fine at serving-bench scale; a parent-linked
     layout (``(parent_id, page_tokens)`` keys) is the upgrade path if
     multi-thousand-page prompts ever matter.
+
+    Shared mode (speculative decoding): construct with a *sequence* of
+    pools and each node holds one page id per pool (the trie is keyed on
+    tokens; per-model pools hold the pages). Node values are then tuples
+    — draft and target share one prefix cache, hit or evicted as a unit —
+    and a node is evictable only when every pool's ref is trie-only.
+    Single-pool construction keeps the original int-valued API.
     """
 
-    def __init__(self, pool: PagePool, page_size: int):
-        self.pool = pool
+    def __init__(self, pool, page_size: int):
+        self.pools: Tuple[PagePool, ...] = tuple(pool) \
+            if isinstance(pool, (list, tuple)) else (pool,)
+        self.pool = self.pools[0]                 # back-compat alias
         self.page_size = page_size
-        self.nodes: Dict[Tuple[int, ...], int] = {}    # token prefix -> page
+        # token prefix -> page id (single pool) / per-pool page ids (shared)
+        self.nodes: Dict[Tuple[int, ...], Any] = {}
         self._tick = 0
         self._last_use: Dict[Tuple[int, ...], int] = {}
         self._n_children: Dict[Tuple[int, ...], int] = {}
+
+    def _as_tuple(self, value) -> Tuple[int, ...]:
+        return value if isinstance(value, tuple) else (value,)
+
+    def is_reclaimable(self, value) -> bool:
+        """True when a node's only holder, in *every* pool, is the trie."""
+        return all(pool.ref[pid] == 1
+                   for pool, pid in zip(self.pools, self._as_tuple(value)))
 
     def __len__(self) -> int:
         return len(self.nodes)
@@ -214,33 +232,39 @@ class PrefixTrie:
                 self._last_use[key] = self._tick
         return pages
 
-    def insert(self, prompt: np.ndarray, page_index: int, pid: int) -> bool:
+    def insert(self, prompt: np.ndarray, page_index: int, pid) -> bool:
         """Cache page ``page_index`` of ``prompt`` (must be full and
-        prefilled). Takes a pool ref on insert; no-op if already cached."""
+        prefilled). ``pid`` is an int (single pool) or a per-pool tuple
+        (shared mode). Takes one ref per pool on insert; no-op if already
+        cached."""
         key = tuple(int(t) for t in prompt[: (page_index + 1) * self.page_size])
         if key in self.nodes:
             return False
+        pids = self._as_tuple(pid)
+        assert len(pids) == len(self.pools), (pids, len(self.pools))
         self.nodes[key] = pid
         parent = key[:-self.page_size]
         if parent in self.nodes:
             self._n_children[parent] = self._n_children.get(parent, 0) + 1
-        self.pool.retain(pid)
+        for pool, p in zip(self.pools, pids):
+            pool.retain(p)
         self._tick += 1
         self._last_use[key] = self._tick
         return True
 
     def evictable(self) -> List[Tuple[int, Tuple[int, ...]]]:
-        """(last_use, key) of evictable leaves: trie-only refs (ref == 1),
-        not extended by another cached node (per-node child counts keep
-        this scan linear in cached nodes)."""
+        """(last_use, key) of evictable leaves: trie-only refs (ref == 1 in
+        every pool), not extended by another cached node (per-node child
+        counts keep this scan linear in cached nodes)."""
         return [(self._last_use[key], key)
                 for key, pid in self.nodes.items()
-                if self.pool.ref[pid] == 1
+                if self.is_reclaimable(pid)
                 and not self._n_children.get(key)]
 
-    def evict_one(self) -> Optional[int]:
-        """Drop the LRU evictable leaf, freeing its page. Returns the page
-        id (now on the free list) or None."""
+    def evict_one(self):
+        """Drop the LRU evictable leaf, freeing its page(s). Returns the
+        node value — page id (single pool) / per-pool tuple (shared),
+        now back on the free list(s) — or None."""
         cands = self.evictable()
         if not cands:
             return None
@@ -253,22 +277,24 @@ class PrefixTrie:
             self._n_children[parent] -= 1
             if not self._n_children[parent]:
                 del self._n_children[parent]
-        self.pool.release(pid)
+        for pool, p in zip(self.pools, self._as_tuple(pid)):
+            pool.release(p)
         return pid
 
     def evictable_count(self) -> int:
         return len(self.evictable())
 
     def reclaimable_count(self) -> int:
-        """Pages the trie could hand back via *cascading* leaf eviction:
-        every trie-only (ref == 1) node. Strictly larger than
-        :meth:`evictable_count` for deep chains — a 15-page chain has one
-        evictable leaf but 15 reclaimable pages, and ``_alloc_page``'s
-        evict-per-allocation loop does drain it leaf by leaf. (A ref==1
-        parent can never hide a ref>1 child: matching retains every
-        ancestor, so request refs are upward-closed along a chain.)"""
+        """Pages (per pool) the trie could hand back via *cascading* leaf
+        eviction: every trie-only (ref == 1 in all pools) node. Strictly
+        larger than :meth:`evictable_count` for deep chains — a 15-page
+        chain has one evictable leaf but 15 reclaimable pages, and
+        ``_alloc_page``'s evict-per-allocation loop does drain it leaf by
+        leaf. (A ref==1 parent can never hide a ref>1 child: matching
+        retains every ancestor, so request refs are upward-closed along a
+        chain.)"""
         return int(sum(1 for pid in self.nodes.values()
-                       if self.pool.ref[pid] == 1))
+                       if self.is_reclaimable(pid)))
 
 
 class PagedCache:
@@ -287,17 +313,25 @@ class PagedCache:
 
     def __init__(self, model, n_slots: int, max_len: int, *,
                  page_size: int = 16, n_pages: Optional[int] = None,
-                 dtype=None):
+                 dtype=None, slack_tokens: int = 0):
         self.model = model
         self.n_slots = n_slots
         self.max_len = max_len
         self.page_size = page_size
-        self.max_pages = math.ceil(max_len / page_size)   # block-table width
+        # slack_tokens: speculative decoding scatters a k-token window past
+        # the accepted depth, so a slot can transiently need pages beyond
+        # prompt + max_new_tokens; the slack widens the block table and the
+        # per-request reservation so the window never outruns capacity
+        self.slack_tokens = slack_tokens
+        self.max_pages = math.ceil((max_len + slack_tokens) / page_size)
         if n_pages is None:
             # dense-equivalent capacity + the null page
             n_pages = n_slots * self.max_pages + 1
         self.n_pages = n_pages
         self.dtype = dtype
+        # position of this cache's page ids inside shared-trie node tuples
+        # (see share_trie); 0 and int-valued nodes while the trie is private
+        self._trie_slot = 0
 
         caches = model.init_paged_caches(n_slots, n_pages, page_size, dtype)
         mesh, rules = sh.current()
@@ -348,7 +382,9 @@ class PagedCache:
                 - self.reserved)
 
     # ------------------------------------------------------------- admission
-    def _match(self, prompt: np.ndarray, touch: bool = True) -> List[int]:
+    def _match_nodes(self, prompt: np.ndarray, touch: bool = True) -> List[Any]:
+        """Trie node values (page id, or per-pool tuple in shared mode)
+        for the longest cached prefix."""
         if not self.prefix_cache_enabled or len(prompt) <= self.page_size:
             return []
         # never match the *entire* prompt: the engine must compute at least
@@ -356,15 +392,23 @@ class PagedCache:
         cap = (len(prompt) - 1) // self.page_size
         return self.trie.match(prompt, cap, touch=touch)
 
+    def _own_pid(self, node_value) -> int:
+        return node_value[self._trie_slot] \
+            if isinstance(node_value, tuple) else node_value
+
+    def _match(self, prompt: np.ndarray, touch: bool = True) -> List[int]:
+        return [self._own_pid(v) for v in self._match_nodes(prompt, touch)]
+
     def can_admit(self, prompt_len: int, max_new_tokens: int,
                   prompt: Optional[np.ndarray] = None) -> bool:
-        matched = self._match(prompt, touch=False) if prompt is not None \
-            else []
-        total = self.pages_for(prompt_len + max_new_tokens)
+        matched = self._match_nodes(prompt, touch=False) \
+            if prompt is not None else []
+        total = self.pages_for(prompt_len + max_new_tokens
+                               + self.slack_tokens)
         # matched pages whose only holder is the trie are counted in
         # available() as evictable, but admission pins them (retain) —
         # they are consumed capacity, not free capacity
-        pinned = sum(1 for pid in matched if self.pool.ref[pid] == 1)
+        pinned = sum(1 for v in matched if self.trie.is_reclaimable(v))
         return total - len(matched) + pinned <= self.available()
 
     def _alloc_page(self) -> int:
@@ -391,7 +435,8 @@ class PagedCache:
             row[j] = pid
         for j in range(len(matched), n_prompt_pages):
             row[j] = self._alloc_page()
-        total = self.pages_for(len(prompt) + max_new_tokens)
+        total = self.pages_for(len(prompt) + max_new_tokens
+                               + self.slack_tokens)
         n_res = total - n_prompt_pages
         self.reserved += n_res
         self._slot_reserved[slot] = n_res
@@ -411,6 +456,8 @@ class PagedCache:
         per chunk would be quadratic in prompt length on the host."""
         if not self.prefix_cache_enabled:
             return
+        assert len(self.trie.pools) == 1, \
+            "shared trie: publish via publish_prefix_shared"
         n_full = min(upto_tokens, len(prompt)) // self.page_size
         row = self.block_tables[slot]
         for j in range(from_tokens // self.page_size, n_full):
@@ -430,6 +477,32 @@ class PagedCache:
         """Block-table width needed to cover ``kv_len`` cached tokens."""
         return min(self.pages_for(max(kv_len, 1)), self.max_pages)
 
+    def rollback(self, slot: int, keep_tokens: int) -> int:
+        """Truncate the slot's block table to the pages covering
+        ``keep_tokens`` accepted tokens, releasing materialized pages past
+        them (the speculative-decode rejection path — host-side bookkeeping
+        only; device K/V there is garbage that the next window re-scatters
+        anyway). Only private decode pages can live past the accepted depth
+        — publishing covers full *prompt* pages and the accepted depth
+        never retreats below the prompt — so every release actually frees.
+        Freed pages return to the slot's reservation
+        (:meth:`ensure_decode_page` re-draws on it). Returns the number of
+        pages released."""
+        keep_pages = self.pages_for(max(keep_tokens, 0))
+        row = self.block_tables[slot]
+        n = 0
+        for j in range(keep_pages, self.max_pages):
+            pid = int(row[j])
+            if pid != NULL_PAGE:
+                self.pool.release(pid)
+                row[j] = NULL_PAGE
+                n += 1
+        if n:
+            self.reserved += n
+            self._slot_reserved[slot] += n
+            self.dirty = True
+        return n
+
     def free_slot(self, slot: int) -> None:
         """Release the slot's page refs (trie-cached pages persist for
         reuse; private pages return to the free list) and drop its
@@ -441,3 +514,40 @@ class PagedCache:
         self.reserved -= self._slot_reserved[slot]
         self._slot_reserved[slot] = 0
         self.dirty = True
+
+
+# --------------------------------------------------------------- shared trie
+
+def share_trie(caches: List[PagedCache]) -> PrefixTrie:
+    """Replace each cache's private trie with ONE shared, token-keyed trie
+    whose nodes hold a page id per cache's pool — speculative decoding's
+    prefix cache: draft and target hit (and are evicted) as a unit, so a
+    trie hit is counted once and never leaves the two pools disagreeing
+    about which prefixes are cached. Call right after construction, before
+    any admission."""
+    ps = caches[0].page_size
+    assert all(c.page_size == ps for c in caches), "page_size must match"
+    trie = PrefixTrie([c.pool for c in caches], ps)
+    for i, c in enumerate(caches):
+        assert len(c.trie) == 0, "share_trie must run before any publish"
+        c.trie = trie
+        c._trie_slot = i
+    return trie
+
+
+def publish_prefix_shared(caches: List[PagedCache], prompt: np.ndarray,
+                          slot: int, upto_tokens: int,
+                          from_tokens: int = 0) -> None:
+    """Shared-trie counterpart of :meth:`PagedCache.publish_prefix`: insert
+    the slot's full, already-prefilled prompt pages as joint (per-pool)
+    nodes. All caches must have prefilled the same token range into the
+    same slot before this runs."""
+    if not all(c.prefix_cache_enabled for c in caches):
+        return
+    trie = caches[0].trie
+    assert all(c.trie is trie for c in caches), "caches must share one trie"
+    ps = trie.page_size
+    n_full = min(upto_tokens, len(prompt)) // ps
+    for j in range(from_tokens // ps, n_full):
+        pids = tuple(int(c.block_tables[slot, j]) for c in caches)
+        trie.insert(prompt, j, pids)

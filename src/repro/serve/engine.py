@@ -54,7 +54,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import sampling as sampling_lib
-from .cache import PagedCache, SlotCache
+from .cache import PagedCache, SlotCache, publish_prefix_shared, share_trie
 from .metrics import ServeMetrics
 from .scheduler import Request, RequestState, Scheduler
 
@@ -72,7 +72,8 @@ class Engine:
                  paged: bool = False, page_size: int = 16,
                  n_pages: Optional[int] = None,
                  prefill_chunk_tokens: Optional[int] = None,
-                 prefill_token_budget: Optional[int] = None):
+                 prefill_token_budget: Optional[int] = None,
+                 spec_draft=None, spec_k: int = 4):
         cfg = model.cfg
         if not cfg.causal:
             raise ValueError(f"{cfg.name}: encoder-only arch has no decode step")
@@ -88,10 +89,47 @@ class Engine:
         self.metrics = metrics if metrics is not None else ServeMetrics()
         self.step_count = 0
 
+        # ---- speculative decoding (paged only): a compressed draft model
+        # proposes spec_k tokens per step; the target verifies the window in
+        # one dispatch and the step advances by 1..spec_k+1 tokens. Archs
+        # with recurrent state (mamba/rwkv) cannot roll state back cheaply:
+        # they fall back to the one-token decode loop (spec_active False).
+        self.spec_k = int(spec_k)
+        self.spec_active = False
+        self.draft_model = self.draft_params = None
+        self.draft_cache: Optional[PagedCache] = None
+        if spec_draft is not None:
+            if not paged:
+                raise ValueError("spec_draft requires paged=True (rollback "
+                                 "is block-table truncation)")
+            if self.spec_k < 1:
+                raise ValueError(f"spec_k must be >= 1, got {spec_k}")
+            draft_model, draft_params = spec_draft
+            if draft_model.cfg.vocab != cfg.vocab:
+                raise ValueError(
+                    f"draft vocab {draft_model.cfg.vocab} != target vocab "
+                    f"{cfg.vocab}")
+            if model.spec_decode_supported and draft_model.spec_decode_supported:
+                self.spec_active = True
+                self.draft_model = draft_model
+                self.draft_params = draft_params
+
         if paged:
+            slack = self.spec_k if self.spec_active else 0
             self.cache = PagedCache(model, n_slots, max_len,
                                     page_size=page_size, n_pages=n_pages,
-                                    dtype=dtype)
+                                    dtype=dtype, slack_tokens=slack)
+            if self.spec_active:
+                self.draft_cache = PagedCache(
+                    self.draft_model, n_slots, max_len, page_size=page_size,
+                    n_pages=n_pages, dtype=dtype, slack_tokens=slack)
+                # ONE token-keyed trie across both pools: draft and target
+                # hit shared prefixes as a unit (trie hit counted once)
+                share_trie([self.cache, self.draft_cache])
+                self._propose = jax.jit(self._propose_impl)
+                self._verify = jax.jit(self._verify_impl)
+                self._chunk_draft = jax.jit(self._prefill_chunk_draft_impl)
+                self._dbt_dev: Dict[int, jax.Array] = {}
             # chunks replace buckets: no largest-bucket rejection, one
             # prefill compile instead of one per bucket
             self.scheduler = Scheduler(n_slots, max_len, strict_buckets=False)
@@ -179,6 +217,62 @@ class Engine:
         dev = self._set_slot_impl(dev, slot, tok, temp, top_k, key)
         return tok, caches, dev
 
+    def _prefill_chunk_draft_impl(self, dparams, dcaches, tokens, bt_row,
+                                  slot, start, chunk_len):
+        """Draft-side prefill chunk: same tokens, the draft's own page pool.
+        The draft's logits are never sampled during prefill — the pending
+        token comes from the target — so only the caches survive."""
+        _, dcaches = self.draft_model.prefill_chunk(
+            dparams, tokens, dcaches, bt_row, slot, start, chunk_len)
+        return dcaches
+
+    def _propose_impl(self, dparams, dcaches, dev, block_tables, live, pos0):
+        """Draft-propose: ``spec_k`` decode steps of the draft model in one
+        jitted scan, starting from the host-authoritative accepted depth
+        ``pos0``. Feeds the pending token first, so the draft cache ends
+        holding K/V for window positions ``pos0 .. pos0+k-1``. Returns the
+        proposed tokens (B, k), the proposal distributions q (B, k, V) the
+        rejection sampler needs, and the draft caches."""
+        dcaches = self.draft_model.set_paged_pos(dcaches, pos0)
+        base = sampling_lib.fold_keys(dev["keys"], dev["counters"])
+
+        def step_fn(carry, i):
+            caches, toks = carry
+            logits, caches = self.draft_model.decode_step(
+                dparams, toks, caches, block_tables=block_tables, live=live)
+            # per-draft-position keys: salts 3.. (accept/resample use 1, 2)
+            keys = jax.vmap(jax.random.fold_in, in_axes=(0, None))(base, 3 + i)
+            nxt, q = sampling_lib.propose_token(logits, dev["temps"],
+                                                dev["top_ks"], keys)
+            return (caches, nxt), (nxt, q)
+
+        (dcaches, _), (toks_seq, q_seq) = jax.lax.scan(
+            step_fn, (dcaches, dev["tokens"]),
+            jnp.arange(self.spec_k, dtype=jnp.int32))
+        return (jnp.moveaxis(toks_seq, 0, 1), jnp.moveaxis(q_seq, 0, 1),
+                dcaches)
+
+    def _verify_impl(self, params, caches, dev, block_tables, live, pos0,
+                     draft_toks, draft_q):
+        """Target-verify: score the (k+1)-token window [pending, d_1..d_k]
+        in ONE dispatch, run acceptance in-graph, and advance the sampling
+        state by the per-row acceptance count. Returns the updated device
+        state, caches, the emitted-token window (B, k+1) and n_accepted
+        (B,) — the host emits ``out[:n+1]`` per live slot."""
+        caches = self.model.set_paged_pos(caches, pos0)
+        window = jnp.concatenate([dev["tokens"][:, None], draft_toks], axis=1)
+        logits, caches = self.model.verify_step(params, window, caches,
+                                                block_tables, live=live)
+        base = sampling_lib.fold_keys(dev["keys"], dev["counters"])
+        out, n_acc = sampling_lib.spec_accept(
+            logits, draft_toks, draft_q, dev["temps"], dev["top_ks"], base)
+        adv = jnp.where(live, n_acc + 1, 0).astype(jnp.int32)
+        new_tok = jnp.take_along_axis(out, n_acc[:, None], axis=1)[:, 0]
+        dev = dict(dev,
+                   tokens=jnp.where(live, new_tok, dev["tokens"]),
+                   counters=dev["counters"] + adv)
+        return dev, caches, out, n_acc
+
     def _set_slot_impl(self, dev, slot, tok, temp, top_k, key):
         return {
             "tokens": dev["tokens"].at[slot].set(tok),
@@ -227,6 +321,12 @@ class Engine:
         self.metrics.on_admit(req.id)
         matched = self.cache.admit_request(slot, req.prompt,
                                            req.max_new_tokens)
+        if self.spec_active:
+            # the shared trie guarantees both caches match the same prefix,
+            # so draft and target prefill skip identical token ranges
+            dmatched = self.draft_cache.admit_request(slot, req.prompt,
+                                                      req.max_new_tokens)
+            assert dmatched == matched, (dmatched, matched)
         req.prefill_pos = matched
         req.n_matched = matched
         self.n_prefill_tokens_skipped += matched
@@ -260,6 +360,17 @@ class Engine:
                 jnp.asarray(sp.temperature, jnp.float32),
                 jnp.asarray(sp.top_k, jnp.int32),
                 sampling_lib.base_key(sp.seed))
+            if self.spec_active:
+                # mirror the chunk into the draft's page pool (one extra
+                # dispatch; its logits are discarded — the target samples)
+                dctx = min(_next_pow2(self.draft_cache.pages_for(pos + tc)),
+                           self.draft_cache.max_pages)
+                self.draft_cache.caches = self._chunk_draft(
+                    self.draft_params, self.draft_cache.caches,
+                    jnp.asarray(toks),
+                    jnp.asarray(self.draft_cache.block_tables[slot][:dctx]),
+                    jnp.asarray(slot, jnp.int32), jnp.asarray(pos, jnp.int32),
+                    jnp.asarray(n_real, jnp.int32))
             req.prefill_pos = pos + n_real
             self.n_prefill_chunks += 1
             self.n_prefill_tokens += n_real
@@ -267,8 +378,13 @@ class Engine:
             budget -= tc
             ran = True
             # the chunk's full prompt pages now hold real K/V -> shareable
-            self.cache.publish_prefix(req.prompt, slot, req.prefill_pos,
+            if self.spec_active:
+                publish_prefix_shared([self.cache, self.draft_cache],
+                                      req.prompt, slot, req.prefill_pos,
                                       from_tokens=pos)
+            else:
+                self.cache.publish_prefix(req.prompt, slot, req.prefill_pos,
+                                          from_tokens=pos)
             if req.prefill_pos >= plen:
                 self._prefill_queue.popleft()
                 self._live[slot] = True
@@ -292,13 +408,23 @@ class Engine:
     def warmup(self) -> None:
         """Pre-compile the paged decode program at every active-width rung
         so steady-state serving never pauses for a mid-stream compile (the
-        width grows with the deepest live sequence). Results are discarded;
-        engine state is untouched. No-op for the dense engine (one decode
-        shape, compiled on first step)."""
+        width grows with the deepest live sequence). In spec mode the
+        propose scan and the (k+1)-query verify program compile per rung
+        instead. Results are discarded; engine state is untouched. No-op
+        for the dense engine (one decode shape, compiled on first step)."""
         for w in self.decode_widths():
-            self._decode_paged(self.params, self.cache.caches, self._dev,
-                               jnp.zeros((self.n_slots, w), jnp.int32),
-                               jnp.zeros((self.n_slots,), bool))
+            zbt = jnp.zeros((self.n_slots, w), jnp.int32)
+            zlive = jnp.zeros((self.n_slots,), bool)
+            if self.spec_active:
+                zpos = jnp.zeros((self.n_slots,), jnp.int32)
+                dt, dq, _ = self._propose(self.draft_params,
+                                          self.draft_cache.caches, self._dev,
+                                          zbt, zlive, zpos)
+                self._verify(self.params, self.cache.caches, self._dev, zbt,
+                             zlive, zpos, dt, dq)
+            else:
+                self._decode_paged(self.params, self.cache.caches, self._dev,
+                                   zbt, zlive)
 
     def _live_mask_dev(self) -> jax.Array:
         """Device copy of the liveness mask, re-uploaded only when slot
@@ -320,6 +446,16 @@ class Engine:
                 self.cache.block_tables[:, :width])
         return self._bt_dev[width]
 
+    def _draft_block_tables_dev(self, width: int) -> jax.Array:
+        """Draft-pool counterpart of :meth:`_block_tables_dev`."""
+        if self.draft_cache.dirty:
+            self._dbt_dev = {}
+            self.draft_cache.dirty = False
+        if width not in self._dbt_dev:
+            self._dbt_dev[width] = jnp.asarray(
+                self.draft_cache.block_tables[:, :width])
+        return self._dbt_dev[width]
+
     def _emit(self, req: Request, tok: int) -> None:
         """Record one generated token; finish the request if it stops."""
         req.generated.append(tok)
@@ -333,6 +469,8 @@ class Engine:
             if slot is not None:
                 if self.paged:
                     self.cache.free_slot(slot)
+                    if self.spec_active:
+                        self.draft_cache.free_slot(slot)
                 self._live[slot] = False
                 if req.sampling.temperature > 0:
                     self._dev = self._clear_slot(
@@ -361,13 +499,18 @@ class Engine:
         slots. Returns True if any work was done."""
         if self.paged:
             # one at a time: each admission consumes pages, and the pool
-            # predicate for the next queue head must see that
+            # predicate for the next queue head must see that (spec mode:
+            # in BOTH pools)
+            def _can(r):
+                ok = self.cache.can_admit(len(r.prompt), r.max_new_tokens,
+                                          prompt=r.prompt)
+                if ok and self.spec_active:
+                    ok = self.draft_cache.can_admit(
+                        len(r.prompt), r.max_new_tokens, prompt=r.prompt)
+                return ok
             admitted = []
             while True:
-                pairs = self.scheduler.admit(
-                    can_admit=lambda r: self.cache.can_admit(
-                        len(r.prompt), r.max_new_tokens, prompt=r.prompt),
-                    max_n=1)
+                pairs = self.scheduler.admit(can_admit=_can, max_n=1)
                 if not pairs:
                     break
                 self._admit_one_paged(*pairs[0])
@@ -384,6 +527,9 @@ class Engine:
             self.metrics.on_step(0, self.n_slots)
             self._report_kv()
             return bool(admitted) or prefilled
+
+        if self.spec_active:
+            return self._step_spec()
 
         if self.paged:
             # materialize this step's write pages and size the active
@@ -415,7 +561,68 @@ class Engine:
             req = self.scheduler.running.get(int(slot))
             if req is None:
                 continue
+            self.metrics.on_decode_step(req.id, 1)
             self._emit(req, int(next_np[slot]))
+        return True
+
+    def _step_spec(self) -> bool:
+        """The speculative decode step: materialize window pages in both
+        pools, draft-propose (one scan dispatch), target-verify (one
+        (k+1)-query dispatch), then emit 1..k+1 tokens per live slot with
+        stop checks anywhere inside the accepted window, and roll both
+        caches back to the accepted depth."""
+        k = self.spec_k
+        pos0 = np.zeros((self.n_slots,), np.int32)
+        needed = 1
+        for slot in np.nonzero(self._live)[0]:
+            req = self.scheduler.running.get(int(slot))
+            if req is None:
+                continue
+            wpos = self._kv_len(req)
+            pos0[slot] = wpos
+            # target writes window positions wpos..wpos+k; the draft only
+            # wpos..wpos+k-1 — materialize each range against the slack
+            # reservation
+            for t in range(k + 1):
+                self.cache.ensure_decode_page(int(slot), wpos + t)
+                if t < k:
+                    self.draft_cache.ensure_decode_page(int(slot), wpos + t)
+            needed = max(needed, self.cache.pages_used(int(slot),
+                                                       wpos + k + 1))
+        width = min(_next_pow2(needed), self.cache.max_pages)
+        bt = self._block_tables_dev(width)
+        dbt = self._draft_block_tables_dev(width)
+        live = self._live_mask_dev()
+        pos0_dev = jnp.asarray(pos0)
+
+        draft_toks, draft_q, self.draft_cache.caches = self._propose(
+            self.draft_params, self.draft_cache.caches, self._dev, dbt,
+            live, pos0_dev)
+        self._dev, self.cache.caches, out_dev, n_acc_dev = self._verify(
+            self.params, self.cache.caches, self._dev, bt, live, pos0_dev,
+            draft_toks, draft_q)
+        out_np = np.asarray(out_dev)
+        n_acc_np = np.asarray(n_acc_dev)
+
+        self.metrics.on_step(int(self._live.sum()), self.n_slots)
+        self._report_kv()
+        for slot in np.nonzero(self._live)[0]:
+            req = self.scheduler.running.get(int(slot))
+            if req is None:
+                continue
+            n = int(n_acc_np[slot])
+            self.metrics.on_decode_step(req.id, n + 1, n_proposed=k,
+                                        n_accepted=n)
+            for i in range(n + 1):
+                self._emit(req, int(out_np[slot, i]))
+                if req.state == RequestState.DONE:
+                    break           # EOS/max inside the window: drop the rest
+            if req.state != RequestState.DONE:
+                # truncate both block tables to the accepted depth — pages
+                # past it hold rejected-window K/V (re-ensured next step)
+                keep = self._kv_len(req)
+                self.cache.rollback(int(slot), keep)
+                self.draft_cache.rollback(int(slot), keep)
         return True
 
     def run(self, requests: Sequence[Request],

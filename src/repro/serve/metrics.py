@@ -22,6 +22,29 @@ class RequestMetrics:
     t_done: Optional[float] = None
     n_prompt: int = 0
     n_generated: int = 0
+    # speculative decoding: decode steps taken, draft tokens proposed, and
+    # draft tokens accepted (non-spec decode counts a step per token with
+    # zero proposals, so tokens_per_step degrades to 1.0 and acceptance
+    # stays undefined)
+    n_decode_steps: int = 0
+    n_draft_proposed: int = 0
+    n_draft_accepted: int = 0
+
+    @property
+    def tokens_per_step(self) -> Optional[float]:
+        """Mean advance per decode step (1.0 without speculation; up to
+        k+1 with it). The first token comes out of prefill, not a decode
+        step, so it is excluded."""
+        if self.n_decode_steps == 0:
+            return None
+        return max(self.n_generated - 1, 0) / self.n_decode_steps
+
+    @property
+    def acceptance_rate(self) -> Optional[float]:
+        """Fraction of proposed draft tokens the target accepted."""
+        if self.n_draft_proposed == 0:
+            return None
+        return self.n_draft_accepted / self.n_draft_proposed
 
     @property
     def ttft(self) -> Optional[float]:
@@ -82,6 +105,17 @@ class ServeMetrics:
         if m.t_first_token is None:
             m.t_first_token = self.clock()
 
+    def on_decode_step(self, req_id: int, n_tokens: int,
+                       n_proposed: int = 0, n_accepted: int = 0) -> None:
+        """One decode step advanced ``req_id`` by ``n_tokens``. Spec mode
+        also reports the draft window: ``n_proposed`` tokens offered,
+        ``n_accepted`` of them taken (the +1 bonus token is in
+        ``n_tokens`` but not in either draft counter)."""
+        m = self.requests[req_id]
+        m.n_decode_steps += 1
+        m.n_draft_proposed += n_proposed
+        m.n_draft_accepted += n_accepted
+
     def on_done(self, req_id: int) -> None:
         t = self.clock()
         self.requests[req_id].t_done = t
@@ -113,6 +147,8 @@ class ServeMetrics:
         waits = sorted(m.queue_wait for m in done if m.queue_wait is not None)
         e2es = sorted(m.e2e_latency for m in done
                       if m.e2e_latency is not None)
+        tps = [m.tokens_per_step for m in done
+               if m.tokens_per_step is not None]
         total_tokens = sum(m.n_generated for m in done)
         elapsed = ((self.t_last - self.t_start)
                    if done and self.t_start is not None else 0.0)
@@ -138,6 +174,11 @@ class ServeMetrics:
             "e2e_p95_s": pct(e2es, 0.95),
             "occupancy_mean": (sum(self._occupancy) / len(self._occupancy)
                                if self._occupancy else 0.0),
+            "tokens_per_step_mean": (sum(tps) / len(tps) if tps else 0.0),
+            "draft_acceptance_rate": (
+                sum(m.n_draft_accepted for m in done)
+                / max(sum(m.n_draft_proposed for m in done), 1)
+                if any(m.n_draft_proposed for m in done) else 0.0),
             "prefill_tokens_computed": self.prefill_tokens_computed,
             "kv_bytes_reserved": self.kv_bytes_reserved,
             "kv_bytes_allocated_peak": self.kv_bytes_allocated_peak,

@@ -61,6 +61,104 @@ def sample(logits, temperatures, top_ks, keys):
     return jax.lax.cond(jnp.any(temperatures > 0.0), general, greedy, None)
 
 
+def policy_probs(logits, temperatures, top_ks):
+    """The per-row sampling distribution as explicit probabilities
+    ``(..., V)``: ``softmax(top-k-masked logits / T)``; rows with
+    ``temperature == 0`` get the greedy one-hot. Speculative decoding's
+    rejection sampler needs ``p`` and ``q`` as numbers (accept ratios,
+    residuals), not just draws — this is the same distribution
+    :func:`_sample_one` draws from via Gumbel-max."""
+    v = logits.shape[-1]
+    logits = logits.astype(jnp.float32)
+    sorted_desc = jax.lax.top_k(logits, v)[0]
+    kk = jnp.clip(jnp.where(top_ks > 0, top_ks, v) - 1, 0, v - 1)
+    thresh = jnp.take_along_axis(sorted_desc, kk[..., None], axis=-1)
+    masked = jnp.where(logits >= thresh, logits, -jnp.inf)
+    t = jnp.maximum(temperatures, 1e-6)[..., None]
+    p = jax.nn.softmax(masked / t, axis=-1)
+    greedy = jax.nn.one_hot(jnp.argmax(logits, axis=-1), v, dtype=jnp.float32)
+    return jnp.where((temperatures <= 0.0)[..., None], greedy, p)
+
+
+def sample_from_probs(p, key):
+    """Draw one token from an explicit distribution ``p (V,)`` (Gumbel-max
+    on ``log p``; zero-probability entries can never win)."""
+    g = jax.random.gumbel(key, p.shape, jnp.float32)
+    logp = jnp.where(p > 0, jnp.log(jnp.maximum(p, 1e-38)), -jnp.inf)
+    return jnp.argmax(logp + g).astype(jnp.int32)
+
+
+def propose_token(logits, temperatures, top_ks, keys):
+    """Draft-side proposal for one speculative step: returns
+    ``(tokens (B,), q (B, V))`` where ``q`` is the distribution each token
+    was drawn from — recorded so the verifier can compute accept ratios.
+    Greedy rows propose argmax (``q`` is then the one-hot)."""
+    q = policy_probs(logits, temperatures, top_ks)
+    toks = jax.vmap(sample_from_probs)(q, keys)
+    greedy = jnp.argmax(logits.astype(jnp.float32), axis=-1).astype(jnp.int32)
+    return jnp.where(temperatures <= 0.0, greedy, toks), q
+
+
+def spec_accept(target_logits, draft_tokens, draft_probs, temperatures,
+                top_ks, keys):
+    """Variable-advance acceptance for one verify window.
+
+    ``target_logits (B, k+1, V)`` — ``[:, i]`` predicts the token after
+    window position ``i``; ``draft_tokens (B, k)``; ``draft_probs
+    (B, k, V)`` — the ``q_i`` each proposal was drawn from; ``keys (B, 2)``.
+
+    Greedy rows (``temperature == 0``): accept the longest prefix where
+    ``d_{i+1} == argmax(L_i)``, then emit ``argmax(L_n)`` — token-identical
+    to target-only greedy by construction. Sampled rows: rejection sampling
+    (accept ``d`` w.p. ``min(1, p(d)/q(d))``; at the first rejection
+    resample from ``normalize(max(p - q, 0))``), which preserves the target
+    distribution exactly. The bonus position (all ``k`` accepted) is the
+    same formula with ``q := 0``, i.e. a fresh draw from ``p_k``.
+
+    Returns ``(out_tokens (B, k+1), n_accepted (B,))``: positions
+    ``< n_accepted`` are accepted draft tokens, position ``n_accepted`` is
+    the bonus/resampled token — the step advances ``n_accepted + 1``.
+    """
+    B, kp1, V = target_logits.shape
+    k = kp1 - 1
+    temps_bt = jnp.broadcast_to(temperatures[:, None], (B, kp1))
+    topk_bt = jnp.broadcast_to(top_ks[:, None], (B, kp1))
+    p = policy_probs(target_logits, temps_bt, topk_bt)           # (B,k+1,V)
+    tgt_greedy = jnp.argmax(target_logits.astype(jnp.float32),
+                            axis=-1).astype(jnp.int32)           # (B, k+1)
+    # greedy acceptance: longest matching prefix
+    match = draft_tokens == tgt_greedy[:, :k]                    # (B, k)
+    n_greedy = jnp.sum(jnp.cumprod(match.astype(jnp.int32), 1), 1)
+    # rejection sampling: u < p(d)/q(d), first rejection truncates
+    p_d = jnp.take_along_axis(p[:, :k], draft_tokens[..., None], -1)[..., 0]
+    q_d = jnp.take_along_axis(draft_probs, draft_tokens[..., None],
+                              -1)[..., 0]
+    u = jax.vmap(lambda kk: jax.random.uniform(
+        jax.random.fold_in(kk, 1), (k,)))(keys)
+    accept = u * q_d < p_d                                       # (B, k)
+    n_samp = jnp.sum(jnp.cumprod(accept.astype(jnp.int32), 1), 1)
+    greedy_row = temperatures <= 0.0
+    n = jnp.where(greedy_row, n_greedy, n_samp).astype(jnp.int32)
+    # residual at position n (q past the last draft position is 0, so the
+    # all-accepted bonus is a plain draw from p_k)
+    q_pad = jnp.concatenate(
+        [draft_probs, jnp.zeros((B, 1, V), draft_probs.dtype)], axis=1)
+    p_n = jnp.take_along_axis(p, n[:, None, None], axis=1)[:, 0]
+    q_n = jnp.take_along_axis(q_pad, n[:, None, None], axis=1)[:, 0]
+    r = jnp.maximum(p_n - q_n, 0.0)
+    rs = jnp.sum(r, axis=-1, keepdims=True)
+    r = jnp.where(rs > 0, r / jnp.maximum(rs, 1e-38), p_n)
+    res_keys = jax.vmap(lambda kk: jax.random.fold_in(kk, 2))(keys)
+    resampled = jax.vmap(sample_from_probs)(r, res_keys)
+    bonus_greedy = jnp.take_along_axis(tgt_greedy, n[:, None], 1)[:, 0]
+    bonus = jnp.where(greedy_row, bonus_greedy, resampled)
+    idx = jnp.arange(kp1)[None, :]
+    d_pad = jnp.concatenate(
+        [draft_tokens, jnp.zeros((B, 1), draft_tokens.dtype)], axis=1)
+    out = jnp.where(idx < n[:, None], d_pad, bonus[:, None])
+    return out.astype(jnp.int32), n
+
+
 @jax.jit
 def fold_keys(base_keys, counters):
     """Per-slot step keys: fold each request's base key (B,2) with its

@@ -8,7 +8,7 @@ from conftest import run_forced_device_subprocess as _run
 def test_mesh_shapes():
     _run("""
 import jax
-from repro.launch.mesh import make_production_mesh, data_axes
+from repro.dist.mesh import make_production_mesh, data_axes
 # NB: on 8 forced devices we can't build the real 256/512-chip meshes, but
 # the factory's shape logic is what we assert here.
 try:
