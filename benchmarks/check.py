@@ -1,0 +1,138 @@
+"""Benchmark regression gate (``benchmarks/run.py --check``).
+
+Each engine-level section distills its committed ``BENCH_*.json`` into one
+*headline metric* — a speed ratio, not an absolute tok/s, so the gate
+tolerates hardware differences between the machine that committed the
+JSON and the machine running the check:
+
+* ``serve`` — best continuous tok/s over best static tok/s (slot backfill
+  payoff);
+* ``fused``  — unfused/fused packed-FFN wall-clock ratio (Fig-3 fusion);
+* ``quant``  — int8 over fp decode tok/s;
+* ``paged``  — best paged-over-dense decode ratio across grid cells;
+* ``spec``   — best speculative-decode speedup over the paged baseline.
+
+``run_check`` re-runs the requested sections fresh (smoke scale, JSON to a
+scratch dir), recomputes each headline, and fails if any fresh headline
+regresses more than ``threshold`` (default 25%) below the committed one.
+Improvements never fail — only regressions gate.
+"""
+
+import json
+import os
+import tempfile
+from typing import Callable, Dict, List, Optional, Tuple
+
+
+def _serve_headline(d: dict) -> float:
+    best = {}
+    for r in d["rows"]:
+        if r["mode"] in ("static", "continuous"):
+            best[r["mode"]] = max(best.get(r["mode"], 0.0), r["tok_s"])
+    return best["continuous"] / best["static"]
+
+
+def _fused_headline(d: dict) -> float:
+    return d["ffn"]["unfused_us"] / d["ffn"]["fused_us"]
+
+
+def _quant_headline(d: dict) -> float:
+    return d["decode"]["int8_tok_s_measured"] / d["decode"]["fp_tok_s"]
+
+
+def _paged_headline(d: dict) -> float:
+    by_cell: Dict[str, Dict[str, float]] = {}
+    for r in d["rows"]:
+        by_cell.setdefault(r["cell"], {})[r["mode"]] = r["tok_s"]
+    ratios = [c["paged"] / c["dense"] for c in by_cell.values()
+              if "paged" in c and "dense" in c]
+    return max(ratios)
+
+
+def _spec_headline(d: dict) -> float:
+    return max(r["speedup"] for r in d["rows"] if "speedup" in r)
+
+
+def _run_serve(out: str) -> None:
+    from benchmarks import serve_bench
+    serve_bench.bench(smoke=True, out=out)
+
+
+def _run_fused(out: str) -> None:
+    from benchmarks import fused_bench
+    fused_bench.rows(smoke=True, out_json=out)
+
+
+def _run_quant(out: str) -> None:
+    from benchmarks import quant_bench
+    quant_bench.rows(smoke=True, out_json=out)
+
+
+def _run_paged(out: str) -> None:
+    from benchmarks import paged_bench
+    paged_bench.bench(smoke=True, out=out)
+
+
+def _run_spec(out: str) -> None:
+    from benchmarks import spec_bench
+    spec_bench.bench(smoke=True, out=out)
+
+
+# section -> (committed json, headline extractor, fresh runner, description)
+HEADLINES: Dict[str, Tuple[str, Callable[[dict], float],
+                           Callable[[str], None], str]] = {
+    "serve": ("BENCH_serve.json", _serve_headline, _run_serve,
+              "continuous/static throughput ratio"),
+    "fused": ("BENCH_fused.json", _fused_headline, _run_fused,
+              "unfused/fused packed-FFN time ratio"),
+    "quant": ("BENCH_quant.json", _quant_headline, _run_quant,
+              "int8/fp decode throughput ratio"),
+    "paged": ("BENCH_paged.json", _paged_headline, _run_paged,
+              "best paged/dense decode ratio"),
+    "spec": ("BENCH_spec.json", _spec_headline, _run_spec,
+             "best speculative-decode speedup"),
+}
+
+
+def compare(section: str, committed: dict, fresh: dict,
+            threshold: float = 0.25) -> Tuple[bool, str]:
+    """Pure comparison: does ``fresh``'s headline hold up against
+    ``committed``'s within ``threshold``? Returns (ok, message)."""
+    _, extract, _, desc = HEADLINES[section]
+    base = extract(committed)
+    now = extract(fresh)
+    floor = base * (1.0 - threshold)
+    ok = now >= floor
+    verdict = "ok" if ok else f"REGRESSION (floor {floor:.3f})"
+    return ok, (f"{section}: {desc} committed={base:.3f} "
+                f"fresh={now:.3f} -> {verdict}")
+
+
+def run_check(sections: Optional[List[str]] = None,
+              threshold: float = 0.25, repo_root: str = ".") -> int:
+    """Re-run each section at smoke scale and gate on its headline.
+    Returns a process exit code (0 = all within threshold)."""
+    names = sections or list(HEADLINES)
+    failures = 0
+    for name in names:
+        if name not in HEADLINES:
+            continue                    # non-gated section (table1, fig4...)
+        path, extract, runner, _ = HEADLINES[name]
+        committed_path = os.path.join(repo_root, path)
+        if not os.path.exists(committed_path):
+            print(f"check,{name},skipped (no committed {path})")
+            continue
+        with open(committed_path) as f:
+            committed = json.load(f)
+        with tempfile.TemporaryDirectory() as tmp:
+            fresh_path = os.path.join(tmp, path)
+            runner(fresh_path)
+            with open(fresh_path) as f:
+                fresh = json.load(f)
+        ok, msg = compare(name, committed, fresh, threshold)
+        print(f"check,{msg}")
+        failures += 0 if ok else 1
+    if failures:
+        print(f"check,FAILED,{failures} section(s) regressed "
+              f">{threshold:.0%} below the committed headline")
+    return 1 if failures else 0

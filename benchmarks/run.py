@@ -23,6 +23,12 @@ Prints ``name,value,derived`` CSV rows. Sections:
 
 ``--fast`` trims step counts for CI-style runs; the full run reproduces the
 numbers quoted in EXPERIMENTS.md.
+
+``--check`` runs the regression gate instead of printing rows: each
+engine-level section (serve/fused/quant/paged/spec) re-runs fresh at
+smoke scale and its headline ratio is compared against the committed
+``BENCH_*.json``; a drop of more than ``--check-threshold`` (default 25%)
+exits non-zero. See ``benchmarks/check.py``.
 """
 
 import argparse
@@ -38,8 +44,21 @@ def main() -> None:
     ap.add_argument("--sections", default="",
                     help="comma list: table1,fig4,fig5,speedup,kernels,"
                          "serve,fused,quant,paged,spec,roofline")
+    ap.add_argument("--check", action="store_true",
+                    help="regression gate: re-run sections fresh and fail "
+                         "if a headline drops >threshold vs the committed "
+                         "BENCH_*.json")
+    ap.add_argument("--check-threshold", type=float, default=0.25,
+                    help="--check failure threshold (fraction below the "
+                         "committed headline)")
     args = ap.parse_args()
     want = set(args.sections.split(",")) if args.sections else None
+
+    if args.check:
+        from benchmarks import check
+        sys.exit(check.run_check(
+            sections=sorted(want) if want else None,
+            threshold=args.check_threshold))
 
     def on(name):
         return want is None or name in want

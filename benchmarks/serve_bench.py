@@ -12,6 +12,13 @@ several arrival rates and ``mpd_c`` compression factors:
   free slots the moment they open, per-request stops, backfill from the
   queue.
 
+A third section replays a **mixed-priority** stream through the paged
+engine under deliberate page-pool pressure: alternating ``interactive``
+(short output, tight TTFT/e2e deadlines) and ``batch`` (long output,
+loose deadline) arrivals, with preemption-by-page-eviction on. It emits
+per-class TTFT p95 and SLO attainment plus the preemption count — the
+serving row the HTTP frontend's scheduling policy is judged by.
+
 Both paths are wall-clock timed after a compile warmup; each emits
 aggregate tok/s (useful tokens / makespan), mean TTFT, and makespan.
 ``--smoke`` trims the grid for CI; ``benchmarks/run.py --sections serve``
@@ -133,6 +140,57 @@ def run_continuous(model, params, requests, *, n_slots, max_len):
     return s["total_tokens"] / makespan, s["ttft_mean_s"], makespan, s
 
 
+def _mixed_requests(cfg, *, n, rate, prompt_len, max_gen, seed):
+    """Alternating interactive/batch arrivals: interactive wants a short
+    answer fast (tight deadlines), batch wants a long one eventually."""
+    from repro.serve import Request
+    rng = np.random.default_rng(seed)
+    toks = rng.integers(0, cfg.vocab, size=(n, prompt_len)).astype(np.int32)
+    t = 0.0
+    out = []
+    for i in range(n):
+        t += rng.exponential(1.0 / rate)
+        if i % 2 == 0:
+            out.append(Request(
+                id=i, prompt=toks[i], priority="interactive",
+                max_new_tokens=int(rng.integers(2, max(max_gen // 8, 3))),
+                ttft_slo_s=2.0, e2e_slo_s=8.0, arrival_time=t))
+        else:
+            out.append(Request(
+                id=i, prompt=toks[i], priority="batch",
+                max_new_tokens=int(rng.integers(max_gen - max_gen // 4,
+                                                max_gen + 1)),
+                e2e_slo_s=60.0, arrival_time=t))
+    return out
+
+
+def run_mixed(model, params, requests, *, n_slots, max_len):
+    """Paged engine under page-pool pressure (~60% of the dense
+    reservation) so interactive arrivals actually preempt batch slots."""
+    from repro.launch.serve import serve_stream
+    from repro.serve import Engine, Request, ServeMetrics
+
+    key = (id(model), n_slots, max_len, "mixed")
+    if key not in _engines:                 # build + compile once per config
+        page_size = 8
+        n_pages = max(int(n_slots * max_len / page_size * 0.6), 8) + 1
+        engine = _engines[key] = Engine(
+            model, params, n_slots=n_slots, max_len=max_len, paged=True,
+            page_size=page_size, n_pages=n_pages)
+        warm = [Request(id=-1 - i, prompt=np.zeros(len(requests[0].prompt),
+                                                   np.int32), max_new_tokens=2)
+                for i in range(2)]
+        engine.run(warm)
+    engine = _engines[key]
+    engine.params = params          # cache hit must not pin stale weights
+    engine.metrics = ServeMetrics()
+    engine.n_preemptions = 0
+    s = serve_stream(engine, requests)
+    s["n_preempted_run"] = engine.n_preemptions
+    makespan = max(m.t_done for m in engine.metrics.requests.values())
+    return s["total_tokens"] / makespan, s["ttft_mean_s"], makespan, s
+
+
 def bench(*, smoke=True, seed=0, out="BENCH_serve.json", trials=3):
     from repro.models import build
 
@@ -185,6 +243,37 @@ def bench(*, smoke=True, seed=0, out="BENCH_serve.json", trials=3):
                         "kv_bytes_reserved": summary["kv_bytes_reserved"],
                     })
                 result["rows"].append(row)
+
+        # mixed-priority load through the paged engine (preemption on):
+        # the per-class SLO row the HTTP frontend's policy is judged by
+        rate = max(rates)
+        runs = []
+        for _ in range(trials):
+            reqs = _mixed_requests(cfg, n=n_req, rate=rate,
+                                   prompt_len=prompt_len, max_gen=max_gen,
+                                   seed=seed)
+            runs.append(run_mixed(model, params, reqs,
+                                  n_slots=n_slots, max_len=max_len))
+        tok_s, ttft, makespan, s = sorted(
+            runs, key=lambda r: r[0])[len(runs) // 2]
+        result["rows"].append({
+            "mode": "mixed", "mpd_c": c, "rate": rate,
+            "tok_s": round(tok_s, 2), "ttft_mean_s": round(ttft, 4),
+            "makespan_s": round(makespan, 3),
+            "n_preempted": s["n_preempted"],
+            "interactive_ttft_p95_s":
+                round(s["interactive_ttft_p95_s"], 4),
+            "batch_ttft_p95_s": round(s["batch_ttft_p95_s"], 4),
+            "interactive_e2e_p95_s":
+                round(s["interactive_e2e_p95_s"], 4),
+            "batch_e2e_p95_s": round(s["batch_e2e_p95_s"], 4),
+            "interactive_ttft_slo_attainment":
+                round(s["interactive_ttft_slo_attainment"], 3),
+            "interactive_e2e_slo_attainment":
+                round(s["interactive_e2e_slo_attainment"], 3),
+            "batch_e2e_slo_attainment":
+                round(s["batch_e2e_slo_attainment"], 3),
+        })
     if out:
         with open(out, "w") as f:
             json.dump(result, f, indent=1)
@@ -199,6 +288,19 @@ def rows(smoke=True, out="BENCH_serve.json"):
         tag = f"{r['mode']}_c{r['mpd_c']}_rate{int(r['rate'])}"
         lines.append(f"serve,{tag}_tok_s,{r['tok_s']}")
         lines.append(f"serve,{tag}_ttft_ms,{round(r['ttft_mean_s']*1e3, 1)}")
+        if r["mode"] == "mixed":
+            for cls in ("interactive", "batch"):
+                lines.append(
+                    f"serve,{tag}_{cls}_ttft_p95_ms,"
+                    f"{round(r[f'{cls}_ttft_p95_s']*1e3, 1)}")
+            lines.append(f"serve,{tag}_interactive_ttft_slo,"
+                         f"{r['interactive_ttft_slo_attainment']}")
+            lines.append(f"serve,{tag}_interactive_e2e_slo,"
+                         f"{r['interactive_e2e_slo_attainment']}")
+            lines.append(f"serve,{tag}_batch_e2e_slo,"
+                         f"{r['batch_e2e_slo_attainment']}")
+            lines.append(f"serve,{tag}_n_preempted,{r['n_preempted']}")
+            continue
         if "e2e_p95_s" in r:
             lines.append(f"serve,{tag}_queue_wait_p95_ms,"
                          f"{round(r['queue_wait_p95_s']*1e3, 1)}")

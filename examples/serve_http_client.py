@@ -1,0 +1,180 @@
+"""Streaming client for the ``repro.serve`` HTTP/SSE frontend.
+
+Start a server first, e.g.::
+
+    PYTHONPATH=src python -m repro.launch.serve --arch olmo-1b --smoke \
+        --paged --http --port 8077
+
+then stream two concurrent requests (one per priority class)::
+
+    PYTHONPATH=src python examples/serve_http_client.py --port 8077
+
+Stdlib-only (asyncio streams — the same dependency budget as the server).
+Flags used by the CI smoke job:
+
+* ``--wait N``      poll ``/healthz`` for up to N seconds before starting
+  (the server JIT-compiles on the first request, so give it headroom);
+* ``--verify --ckpt-dir D``  load the same packed export the server is
+  serving and check every streamed token against a direct-engine greedy
+  run — the frontend must be an exact window onto the engine;
+* ``--check-metrics``  fetch ``/metrics`` afterwards and assert the
+  per-class SLO-attainment series is present.
+"""
+
+import argparse
+import asyncio
+import json
+import sys
+import time
+
+
+async def _healthz(host, port):
+    reader, writer = await asyncio.open_connection(host, port)
+    writer.write(f"GET /healthz HTTP/1.1\r\nHost: {host}\r\n\r\n".encode())
+    await writer.drain()
+    data = await reader.read(65536)
+    writer.close()
+    return json.loads(data.split(b"\r\n\r\n", 1)[1])
+
+
+async def wait_ready(host, port, timeout_s):
+    t0 = time.monotonic()
+    while True:
+        try:
+            return await _healthz(host, port)
+        except (ConnectionError, OSError, json.JSONDecodeError):
+            if time.monotonic() - t0 > timeout_s:
+                raise SystemExit(f"server at {host}:{port} not ready "
+                                 f"after {timeout_s}s")
+            await asyncio.sleep(0.5)
+
+
+async def generate(host, port, spec, label):
+    """POST one generate call and stream its SSE events; returns the
+    token list and the final ``done`` payload."""
+    reader, writer = await asyncio.open_connection(host, port)
+    body = json.dumps(spec).encode()
+    writer.write((f"POST /v1/generate HTTP/1.1\r\nHost: {host}\r\n"
+                  f"Content-Length: {len(body)}\r\n\r\n").encode() + body)
+    await writer.drain()
+
+    toks, done, buf = [], None, b""
+    head = await reader.readuntil(b"\r\n\r\n")
+    status = head.split(b"\r\n", 1)[0].decode()
+    if "200" not in status:
+        raise SystemExit(f"[{label}] {status}: {await reader.read(4096)}")
+    while done is None:
+        chunk = await reader.read(4096)
+        if not chunk:
+            break
+        buf += chunk
+        while b"\n\n" in buf:
+            block, buf = buf.split(b"\n\n", 1)
+            lines = block.split(b"\n")
+            ev = next((l[7:].decode() for l in lines
+                       if l.startswith(b"event: ")), None)
+            data = next((json.loads(l[6:]) for l in lines
+                         if l.startswith(b"data: ")), None)
+            if ev == "token":
+                toks.append(data["token"])
+                print(f"[{label}] token {data['index']}: {data['token']}")
+            elif ev == "done":
+                done = data
+    writer.close()
+    print(f"[{label}] done: {done}")
+    return toks, done
+
+
+async def fetch_metrics(host, port):
+    reader, writer = await asyncio.open_connection(host, port)
+    writer.write(f"GET /metrics HTTP/1.1\r\nHost: {host}\r\n\r\n".encode())
+    await writer.drain()
+    data = b""
+    while True:
+        chunk = await reader.read(65536)
+        if not chunk:
+            break
+        data += chunk
+    writer.close()
+    return data.split(b"\r\n\r\n", 1)[1].decode()
+
+
+def reference_tokens(ckpt_dir, prompts, max_new):
+    """Direct-engine greedy run of the same prompts on the same packed
+    export — the ground truth the SSE streams must reproduce."""
+    import numpy as np
+    from repro.checkpoint import checkpoint as ckpt_lib
+    from repro.serve import Engine, Request
+
+    model, params = ckpt_lib.load_packed(ckpt_dir)
+    max_len = max(len(p) for p in prompts) + max_new
+    engine = Engine(model, params, n_slots=len(prompts), max_len=max_len,
+                    paged=True, page_size=8)
+    reqs = [Request(id=i, prompt=np.asarray(p, np.int32),
+                    max_new_tokens=max_new) for i, p in enumerate(prompts)]
+    return engine.run(reqs)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=8000)
+    ap.add_argument("--wait", type=float, default=0,
+                    help="poll /healthz up to this many seconds first")
+    ap.add_argument("--max-new-tokens", type=int, default=8)
+    ap.add_argument("--verify", action="store_true",
+                    help="check streams against a direct-engine greedy run")
+    ap.add_argument("--ckpt-dir", default="",
+                    help="--verify: packed export the server is serving")
+    ap.add_argument("--check-metrics", action="store_true",
+                    help="assert /metrics carries the SLO series")
+    args = ap.parse_args()
+
+    prompts = [[3, 1, 4, 1, 5, 9, 2, 6], [2, 7, 1, 8, 2, 8, 1, 8, 2, 8]]
+
+    async def run():
+        if args.wait:
+            info = await wait_ready(args.host, args.port, args.wait)
+            print(f"server ready: {info}")
+        return await asyncio.gather(
+            generate(args.host, args.port,
+                     {"prompt": prompts[0],
+                      "max_new_tokens": args.max_new_tokens,
+                      "priority": "interactive", "ttft_slo_ms": 120_000,
+                      "e2e_slo_ms": 300_000}, "interactive"),
+            generate(args.host, args.port,
+                     {"prompt": prompts[1],
+                      "max_new_tokens": args.max_new_tokens,
+                      "priority": "batch", "e2e_slo_ms": 300_000}, "batch"))
+
+    results = asyncio.run(run())
+
+    if args.verify:
+        if not args.ckpt_dir:
+            raise SystemExit("--verify needs --ckpt-dir")
+        ref = reference_tokens(args.ckpt_dir, prompts, args.max_new_tokens)
+        for i, (toks, _) in enumerate(results):
+            if toks != ref[i]:
+                raise SystemExit(f"stream {i} diverged from direct engine: "
+                                 f"{toks} vs {ref[i]}")
+        print(f"verify: {len(results)} streams token-identical to the "
+              f"direct engine")
+
+    if args.check_metrics:
+        text = asyncio.run(fetch_metrics(args.host, args.port))
+        needed = ["repro_serve_slo_attainment{priority=\"interactive\","
+                  "slo=\"ttft\"}",
+                  "repro_serve_slo_attainment{priority=\"batch\","
+                  "slo=\"e2e\"}",
+                  "repro_serve_requests_done_total"]
+        for series in needed:
+            if series not in text:
+                raise SystemExit(f"/metrics missing series: {series}")
+        print("check-metrics: SLO attainment series present")
+
+    print("ok")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -17,6 +17,14 @@ pool, and the target verifies the whole window in one dispatch. Greedy
 output stays token-identical to plain decode; temperature > 0 uses
 rejection sampling. Recurrent archs fall back to the plain loop.
 
+``--http`` serves real traffic instead of the synthetic stream: an
+asyncio HTTP frontend (``repro.serve.server``) streams tokens over SSE
+from ``POST /v1/generate``, honours ``interactive``/``batch`` priority
+classes (interactive preempts batch under page pressure), applies
+bounded-queue backpressure (``--queue-limit`` -> 429 + Retry-After), and
+exposes ``GET /metrics`` (Prometheus text) + ``GET /healthz``. Composes
+with ``--paged`` / ``--spec-draft``.
+
 ``--static`` keeps the legacy path: prefill one fixed batch, decode it in
 lockstep (no admission, no per-request stop) — the baseline the engine is
 benchmarked against in ``benchmarks/serve_bench.py``.
@@ -27,6 +35,7 @@ through ``Model.slot_cache_axes()`` + the active rule table).
 
 import argparse
 import collections
+import logging
 import time
 
 import jax
@@ -36,6 +45,8 @@ import numpy as np
 from repro.configs.common import ARCHS, get_config
 from repro.data import SyntheticLM
 from repro.models import build
+
+log = logging.getLogger("repro.serve.launch")
 
 
 def _static_main(args, cfg, model, params):
@@ -56,14 +67,14 @@ def _static_main(args, cfg, model, params):
     t0 = time.perf_counter()
     logits, caches = prefill(params, prompts, caches)
     jax.block_until_ready(logits)
-    print(f"prefill {args.batch}x{args.prompt_len}: "
-          f"{(time.perf_counter()-t0)*1e3:.1f} ms")
+    log.info("prefill %dx%d: %.1f ms", args.batch, args.prompt_len,
+             (time.perf_counter() - t0) * 1e3)
 
     if cfg.frontend != "token":
         # embed frontends have no incremental token stream to feed back;
         # timing an empty loop would report a bogus decode rate.
-        print("decode: skipped (embed frontend — no autoregressive "
-              "token stream)")
+        log.info("decode: skipped (embed frontend — no autoregressive "
+                 "token stream)")
         return
 
     tok = jnp.argmax(logits, -1)
@@ -73,8 +84,8 @@ def _static_main(args, cfg, model, params):
         tok = jnp.argmax(logits, -1)
     jax.block_until_ready(tok)
     dt = time.perf_counter() - t0
-    print(f"decode {args.gen-1} steps: {dt*1e3:.1f} ms "
-          f"({args.batch*(args.gen-1)/max(dt,1e-9):.0f} tok/s)")
+    log.info("decode %d steps: %.1f ms (%.0f tok/s)", args.gen - 1,
+             dt * 1e3, args.batch * (args.gen - 1) / max(dt, 1e-9))
 
 
 def make_requests(cfg, *, n_requests, rate, prompt_len, gen, seed=0):
@@ -134,13 +145,16 @@ def _load_spec_draft(args):
             "(write one with `train --fold-to-packed` or export_packed)")
     draft, draft_params = ckpt_lib.load_packed(args.spec_draft)
     q = getattr(draft, "quant_report", None)
-    print(f"spec draft: packed export from {args.spec_draft}/packed"
-          + (f" (quantized, {q['bits']}-bit)" if q else "")
-          + f", k={args.spec_k}")
+    log.info("spec draft: packed export from %s/packed%s, k=%d",
+             args.spec_draft,
+             f" (quantized, {q['bits']}-bit)" if q else "", args.spec_k)
     return draft, draft_params
 
 
-def _continuous_main(args, cfg, model, params):
+def _build_engine(args, model, params):
+    """Construct the continuous-batching engine from CLI flags. Shared by
+    the synthetic-stream driver and the ``--http`` frontend. Returns
+    ``(engine, mode_label)``."""
     from repro.serve import Engine
 
     max_len = args.prompt_len + args.gen
@@ -155,39 +169,55 @@ def _continuous_main(args, cfg, model, params):
                         prefill_chunk_tokens=args.prefill_chunk or None,
                         spec_draft=spec_draft, spec_k=args.spec_k)
         mode = "paged+spec" if engine.spec_active else "paged"
-        if spec_draft is not None and not engine.spec_active:
-            print("note: recurrent blocks cannot re-score a token window — "
-                  "speculative decoding disabled, using the plain decode "
-                  "loop")
     else:
         engine = Engine(model, params, n_slots=args.slots, max_len=max_len)
         mode = "continuous"
+    return engine, mode
+
+
+def _continuous_main(args, cfg, model, params):
+    engine, mode = _build_engine(args, model, params)
     requests = make_requests(cfg, n_requests=args.requests, rate=args.rate,
                              prompt_len=args.prompt_len, gen=args.gen,
                              seed=args.seed)
     summary = serve_stream(engine, requests)
-    print(f"{mode}: {summary['n_done']}/{summary['n_requests']} requests, "
-          f"{summary['total_tokens']} tokens in {summary['elapsed_s']:.2f} s "
-          f"({summary['agg_tok_s']:.0f} tok/s)")
-    print(f"ttft mean/p50/p95: {summary['ttft_mean_s']*1e3:.0f}/"
-          f"{summary['ttft_p50_s']*1e3:.0f}/{summary['ttft_p95_s']*1e3:.0f} ms; "
-          f"queue-wait p50/p95: {summary['queue_wait_p50_s']*1e3:.0f}/"
-          f"{summary['queue_wait_p95_s']*1e3:.0f} ms; "
-          f"e2e p50/p95: {summary['e2e_p50_s']*1e3:.0f}/"
-          f"{summary['e2e_p95_s']*1e3:.0f} ms; "
-          f"slot occupancy {summary['occupancy_mean']*100:.0f}%")
+    log.info("%s: %d/%d requests, %d tokens in %.2f s (%.0f tok/s)",
+             mode, summary["n_done"], summary["n_requests"],
+             summary["total_tokens"], summary["elapsed_s"],
+             summary["agg_tok_s"])
+    log.info("ttft mean/p50/p95: %.0f/%.0f/%.0f ms; queue-wait p50/p95: "
+             "%.0f/%.0f ms; e2e p50/p95: %.0f/%.0f ms; slot occupancy %.0f%%",
+             summary["ttft_mean_s"] * 1e3, summary["ttft_p50_s"] * 1e3,
+             summary["ttft_p95_s"] * 1e3, summary["queue_wait_p50_s"] * 1e3,
+             summary["queue_wait_p95_s"] * 1e3, summary["e2e_p50_s"] * 1e3,
+             summary["e2e_p95_s"] * 1e3, summary["occupancy_mean"] * 100)
     if args.paged:
         c = engine.cache
-        print(f"paged kv: page_size={c.page_size}, pool={c.n_pages} pages; "
-              f"allocated peak {summary['kv_bytes_allocated_peak']/1e6:.2f} MB"
-              f" vs dense reservation {summary['kv_bytes_reserved']/1e6:.2f} "
-              f"MB; prefill tokens computed {engine.n_prefill_tokens} "
-              f"(+{engine.n_prefill_tokens_skipped} reused via prefix cache)")
+        log.info("paged kv: page_size=%d, pool=%d pages; allocated peak "
+                 "%.2f MB vs dense reservation %.2f MB; prefill tokens "
+                 "computed %d (+%d reused via prefix cache)",
+                 c.page_size, c.n_pages,
+                 summary["kv_bytes_allocated_peak"] / 1e6,
+                 summary["kv_bytes_reserved"] / 1e6,
+                 engine.n_prefill_tokens, engine.n_prefill_tokens_skipped)
         if engine.spec_active:
-            print(f"spec decode: k={engine.spec_k}, "
-                  f"{summary['tokens_per_step_mean']:.2f} tokens/step, "
-                  f"{summary['draft_acceptance_rate']*100:.0f}% draft "
-                  f"acceptance")
+            log.info("spec decode: k=%d, %.2f tokens/step, %.0f%% draft "
+                     "acceptance", engine.spec_k,
+                     summary["tokens_per_step_mean"],
+                     summary["draft_acceptance_rate"] * 100)
+
+
+def _http_main(args, cfg, model, params):
+    """``--http``: serve real traffic over the asyncio SSE frontend
+    instead of driving a synthetic request stream."""
+    from repro.serve import server as server_lib
+
+    engine, mode = _build_engine(args, model, params)
+    engine.metrics.clock = time.perf_counter
+    log.info("http frontend over %s engine: %d slots, max_len %d",
+             mode, engine.n_slots, engine.max_len)
+    server_lib.run(engine, host=args.host, port=args.port,
+                   queue_limit=args.queue_limit)
 
 
 def _restore_latest(ckpt_dir, params, tag=""):
@@ -198,7 +228,7 @@ def _restore_latest(ckpt_dir, params, tag=""):
     if step is None:
         raise SystemExit(f"no checkpoint under {ckpt_dir}")
     params = ckpt_lib.restore(ckpt_dir, step, {"params": params})["params"]
-    print(f"restored {tag}step {step} from {ckpt_dir}")
+    log.info("restored %sstep %d from %s", tag, step, ckpt_dir)
     return params
 
 
@@ -209,9 +239,9 @@ def _quantize_in_memory(model, params, mode):
 
     params, report = export_lib.quantize_packed(model, params,
                                                 bits=BITS[mode])
-    print(f"quantized packed weights to {mode}: "
-          f"{report['n_layers']} layers, max rel-rms err "
-          f"{report['max_rel_rms']:.2e}")
+    log.info("quantized packed weights to %s: %d layers, "
+             "max rel-rms err %.2e", mode, report["n_layers"],
+             report["max_rel_rms"])
     model.quant_report = report
     return params
 
@@ -234,18 +264,18 @@ def _load_model(args):
         # export_packed: config + fold + perm-fusion + quantization all
         # recorded inside
         if over or args.fold_to_packed:
-            print("note: packed export found — its recorded config wins; "
-                  "ignoring --mpd-c/--mpd-fuse/--fold-to-packed")
+            log.info("note: packed export found — its recorded config "
+                     "wins; ignoring --mpd-c/--mpd-fuse/--fold-to-packed")
         model, params = ckpt_lib.load_packed(args.ckpt_dir)
         stored_q = getattr(model, "quant_report", None)
-        print(f"loaded packed export from {args.ckpt_dir}/packed"
-              + (f" (quantized, {stored_q['bits']}-bit)" if stored_q else ""))
+        log.info("loaded packed export from %s/packed%s", args.ckpt_dir,
+                 f" (quantized, {stored_q['bits']}-bit)" if stored_q else "")
         if args.quantize and not stored_q:
             params = _quantize_in_memory(model, params, args.quantize)
         elif args.quantize and stored_q:
-            print(f"note: export already quantized ({stored_q['bits']}-bit) "
-                  f"— its stored form wins; ignoring --quantize "
-                  f"{args.quantize}")
+            log.info("note: export already quantized (%d-bit) — its "
+                     "stored form wins; ignoring --quantize %s",
+                     stored_q["bits"], args.quantize)
         return model.cfg, model, params
 
     if args.fold_to_packed:
@@ -258,10 +288,10 @@ def _load_model(args):
         model, params = model_md.to_packed(params, fuse=cfg.mpd_fuse,
                                            quantize=args.quantize or None)
         rep = getattr(model, "quant_report", None)
-        print(f"folded to packed: {model.param_count():,} params "
-              f"(was {model_md.param_count():,})"
-              + (f", quantized {args.quantize} (max rel-rms err "
-                 f"{rep['max_rel_rms']:.2e})" if rep else ""))
+        log.info("folded to packed: %s params (was %s)%s",
+                 f"{model.param_count():,}", f"{model_md.param_count():,}",
+                 f", quantized {args.quantize} (max rel-rms err "
+                 f"{rep['max_rel_rms']:.2e})" if rep else "")
         return model.cfg, model, params
 
     model = build(cfg)
@@ -309,6 +339,16 @@ def main(argv=None):
                    "typically the target's own MPD-folded int8 artifact")
     p.add_argument("--spec-k", type=int, default=4,
                    help="draft tokens proposed per verify window")
+    p.add_argument("--http", action="store_true",
+                   help="serve real traffic over HTTP/SSE (POST /v1/generate "
+                   "streams tokens; GET /metrics, /healthz) instead of the "
+                   "synthetic request stream")
+    p.add_argument("--host", default="127.0.0.1", help="--http bind host")
+    p.add_argument("--port", type=int, default=8000,
+                   help="--http bind port (0 = ephemeral)")
+    p.add_argument("--queue-limit", type=int, default=64,
+                   help="--http admission-queue bound; beyond it new "
+                   "requests get 429 + Retry-After")
     p.add_argument("--seed", type=int, default=0)
     p.add_argument("--mpd-c", type=int, default=0, help="0 = config default")
     p.add_argument("--mpd-fuse", action="store_true",
@@ -326,15 +366,22 @@ def main(argv=None):
                    "deploys its stored form automatically")
     args = p.parse_args(argv)
 
+    logging.basicConfig(
+        level=logging.INFO,
+        format="%(asctime)s %(name)s %(levelname)s %(message)s")
+
     cfg0 = get_config(args.arch, smoke=args.smoke)
     if not cfg0.causal:
         raise SystemExit(f"{args.arch} is encoder-only (no decode)")
     if args.static and args.paged:
         raise SystemExit("--static and --paged are mutually exclusive "
                          "(paged is a continuous-engine memory model)")
+    if args.http and args.static:
+        raise SystemExit("--http serves the continuous engine; it cannot "
+                         "combine with --static")
     cfg, model, params = _load_model(args)
-    print(f"serving {cfg.name}: {model.param_count():,} params "
-          f"(mode={cfg.mpd_mode})")
+    log.info("serving %s: %s params (mode=%s)", cfg.name,
+             f"{model.param_count():,}", cfg.mpd_mode)
 
     if args.static:
         _static_main(args, cfg, model, params)
@@ -343,7 +390,10 @@ def main(argv=None):
             raise SystemExit(
                 f"{args.arch} has an embed frontend — the continuous engine "
                 "serves token streams; use --static for prefill timing")
-        _continuous_main(args, cfg, model, params)
+        if args.http:
+            _http_main(args, cfg, model, params)
+        else:
+            _continuous_main(args, cfg, model, params)
 
 
 if __name__ == "__main__":

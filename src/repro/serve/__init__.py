@@ -1,9 +1,11 @@
 """repro.serve — continuous-batching inference engine.
 
 Serving on top of the model zoo's ``prefill`` / ``decode_step``: a
-fixed-shape decode batch of ``n_slots`` sequences, FCFS admission,
-per-request sampling/stop, and caches that shard through ``repro.dist``
-logical-axis rules. Two memory models (see ``engine.Engine``): slot-dense
+fixed-shape decode batch of ``n_slots`` sequences, priority-class
+admission (interactive/batch, FCFS within a class, preemption by page
+eviction under pressure), per-request sampling/stop, and caches that
+shard through ``repro.dist`` logical-axis rules. ``server.GenerateServer``
+puts an HTTP/SSE streaming frontend in front of the engine. Two memory models (see ``engine.Engine``): slot-dense
 (``SlotCache`` — per-slot ``max_len`` reservation, bucketed one-shot
 prefill) and paged (``PagedCache`` — global KV page pool, block tables,
 ref-counted prefix reuse, chunked prefill, paged-attention decode).
@@ -18,12 +20,14 @@ from .cache import (PagedCache, PagePool, PrefixTrie, SlotCache,
 from .engine import Engine
 from .metrics import RequestMetrics, ServeMetrics
 from .sampling import SamplingParams, sample, spec_accept
-from .scheduler import Request, RequestState, Scheduler, make_buckets
+from .scheduler import (PRIORITIES, Request, RequestState, Scheduler,
+                        make_buckets)
+from .server import GenerateServer
 
 __all__ = [
     "Engine", "SlotCache", "PagedCache", "PagePool", "PrefixTrie",
     "share_trie", "publish_prefix_shared",
-    "ServeMetrics", "RequestMetrics",
+    "ServeMetrics", "RequestMetrics", "GenerateServer",
     "SamplingParams", "sample", "spec_accept", "Request", "RequestState",
-    "Scheduler", "make_buckets",
+    "Scheduler", "make_buckets", "PRIORITIES",
 ]

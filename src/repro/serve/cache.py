@@ -515,6 +515,20 @@ class PagedCache:
         self._slot_reserved[slot] = 0
         self.dirty = True
 
+    def preempt_slot(self, slot: int) -> int:
+        """Preemptively evict a *live* slot: drop the request's refs on its
+        pages and its outstanding reservation, exactly like a finish-time
+        :meth:`free_slot` — the distinction is semantic (the request will
+        come back) and observable: trie-shared pages survive (the trie
+        holds its own ref; only this request's ref drops), so when the
+        preempted request is re-admitted its published prefix is a trie
+        hit and re-prefill is cheap. Returns the number of page refs
+        dropped (the requeued request's admission sees exactly this much
+        capacity returned, minus what stays pinned by the trie)."""
+        n = int((self.block_tables[slot] != NULL_PAGE).sum())
+        self.free_slot(slot)
+        return n
+
 
 # --------------------------------------------------------------- shared trie
 

@@ -47,7 +47,8 @@ models — verified in ``tests/test_serve_engine.py`` /
 from __future__ import annotations
 
 import collections
-from typing import Deque, Dict, List, Optional, Sequence
+import logging
+from typing import Callable, Deque, Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -57,6 +58,8 @@ from . import sampling as sampling_lib
 from .cache import PagedCache, SlotCache, publish_prefix_shared, share_trie
 from .metrics import ServeMetrics
 from .scheduler import Request, RequestState, Scheduler
+
+log = logging.getLogger("repro.serve.engine")
 
 
 def _next_pow2(n: int) -> int:
@@ -73,7 +76,7 @@ class Engine:
                  n_pages: Optional[int] = None,
                  prefill_chunk_tokens: Optional[int] = None,
                  prefill_token_budget: Optional[int] = None,
-                 spec_draft=None, spec_k: int = 4):
+                 spec_draft=None, spec_k: int = 4, preemption: bool = True):
         cfg = model.cfg
         if not cfg.causal:
             raise ValueError(f"{cfg.name}: encoder-only arch has no decode step")
@@ -113,6 +116,10 @@ class Engine:
                 self.spec_active = True
                 self.draft_model = draft_model
                 self.draft_params = draft_params
+            else:
+                log.info("recurrent blocks cannot re-score a token window — "
+                         "speculative decoding disabled, using the plain "
+                         "decode loop")
 
         if paged:
             slack = self.spec_k if self.spec_active else 0
@@ -171,6 +178,17 @@ class Engine:
 
         self._decode = jax.jit(self._decode_impl)
         self._clear_slot = jax.jit(self._clear_slot_impl)
+
+        # streaming hooks (the HTTP server wires these). token_cb fires for
+        # every emitted token with its index in the request's output — a
+        # preempted request regenerates deterministically and re-fires from
+        # index 0, so consumers dedup by index; done_cb fires once at an
+        # EOS/length stop (never for cancel or preemption).
+        self.token_cb: Optional[Callable[[Request, int, int], None]] = None
+        self.done_cb: Optional[Callable[[Request], None]] = None
+        # interactive-over-batch preemption needs page eviction: paged only
+        self.preemption = bool(preemption) and paged
+        self.n_preemptions = 0
 
     # ------------------------------------------------------------ jitted ops
     def _admit_impl(self, params, caches, dev, padded, length, slot, temp,
@@ -295,10 +313,88 @@ class Engine:
         # metadata for the drive loop (serve_stream rebases the clock onto
         # the same timeline, so TTFT stays arrival-accurate there)
         self.scheduler.submit(req)
-        self.metrics.on_submit(req.id, len(req.prompt))
+        self.metrics.on_submit(req.id, len(req.prompt),
+                               priority=req.priority,
+                               ttft_slo_s=req.ttft_slo_s,
+                               e2e_slo_s=req.e2e_slo_s)
 
     def has_work(self) -> bool:
         return self.scheduler.has_work()
+
+    def cancel(self, req: Request) -> None:
+        """Abort a request (client disconnect): pull it out of whichever
+        stage it is in and return its pages to the pool immediately —
+        waiting requests just leave the queue; admitted ones drop their
+        prefill-queue entry, block-table refs, reservation, and liveness.
+        Safe to call between engine steps; a no-op once the request is
+        DONE."""
+        if req.state == RequestState.DONE:
+            return
+        slot = req.slot
+        if self.paged:
+            try:
+                self._prefill_queue.remove(req)
+            except ValueError:
+                pass
+        self.scheduler.finish(req)
+        self.metrics.on_cancel(req.id)
+        if slot is not None:
+            if self.paged:
+                self.cache.free_slot(slot)
+                if self.spec_active:
+                    self.draft_cache.free_slot(slot)
+            self._live[slot] = False
+            if req.sampling.temperature > 0:
+                self._dev = self._clear_slot(self._dev,
+                                             jnp.asarray(slot, jnp.int32))
+        log.info("request %d cancelled (%s, %d tokens streamed)",
+                 req.id, req.priority, len(req.generated))
+
+    # ----------------------------------------------------------- preemption
+    def _preempt(self, victim: Request) -> None:
+        """Evict ``victim`` from its slot: non-shared pages go back to the
+        pool (trie-shared prefix pages survive — the trie holds its own
+        ref), the slot frees, and the request requeues at its original
+        arrival position. Re-admission re-prefills through the resubmit
+        machinery; the prefix trie makes that cheap, and deterministic
+        regeneration keeps the final output identical to an uncontended
+        run."""
+        slot = victim.slot
+        try:
+            self._prefill_queue.remove(victim)     # mid-prefill victims
+        except ValueError:
+            pass
+        self.cache.preempt_slot(slot)
+        if self.spec_active:
+            self.draft_cache.preempt_slot(slot)
+        self._live[slot] = False
+        if victim.sampling.temperature > 0:
+            self._dev = self._clear_slot(self._dev,
+                                         jnp.asarray(slot, jnp.int32))
+        self.scheduler.preempt(victim)
+        self.metrics.on_preempt(victim.id)
+        self.n_preemptions += 1
+        log.info("preempted request %d (%s, slot %d, %d tokens in) for a "
+                 "higher-priority admission", victim.id, victim.priority,
+                 slot, len(victim.generated))
+
+    def _preempt_for_head(self) -> bool:
+        """The queue head cannot admit (no free slot, or page-pool
+        pressure): evict the lowest-priority running request — youngest
+        first within the class, so the FCFS order among victims is what a
+        fresh arrival sequence would have produced — if and only if it
+        ranks strictly below the head. Returns True if a slot was evicted
+        (the caller retries admission, which re-checks capacity)."""
+        if not self.preemption or not self.scheduler.waiting:
+            return False
+        head = self.scheduler.waiting[0]
+        victims = [r for r in self.scheduler.running.values()
+                   if r.priority_rank > head.priority_rank]
+        if not victims:
+            return False
+        victim = max(victims, key=lambda r: (r.priority_rank, r.arrival_seq))
+        self._preempt(victim)
+        return True
 
     # ------------------------------------------------------------ step logic
     def _admit_one(self, req: Request, slot: int) -> None:
@@ -460,6 +556,8 @@ class Engine:
         """Record one generated token; finish the request if it stops."""
         req.generated.append(tok)
         self.metrics.on_token(req.id)
+        if self.token_cb is not None:
+            self.token_cb(req, tok, len(req.generated) - 1)
         stop = (len(req.generated) >= req.max_new_tokens
                 or (req.eos_id >= 0 and tok == req.eos_id))
         if stop:
@@ -475,6 +573,8 @@ class Engine:
                 if req.sampling.temperature > 0:
                     self._dev = self._clear_slot(
                         self._dev, jnp.asarray(slot, jnp.int32))
+            if self.done_cb is not None:
+                self.done_cb(req)
 
     def _kv_len(self, req: Request) -> int:
         """Cached KV depth for a live request: the whole prompt plus every
@@ -511,10 +611,16 @@ class Engine:
             admitted = []
             while True:
                 pairs = self.scheduler.admit(can_admit=_can, max_n=1)
-                if not pairs:
+                if pairs:
+                    self._admit_one_paged(*pairs[0])
+                    admitted += pairs
+                    continue
+                # head blocked (slot or page pressure): preempt the
+                # lowest-priority running request if it outranks, then
+                # retry — each eviction returns capacity the predicate
+                # re-checks
+                if not self._preempt_for_head():
                     break
-                self._admit_one_paged(*pairs[0])
-                admitted += pairs
             prefilled = self._prefill_chunks()
         else:
             admitted = self.scheduler.admit()
@@ -522,6 +628,7 @@ class Engine:
                 self._admit_one(req, slot)
             prefilled = False
         self.step_count += 1
+        self.metrics.on_queue_depth(len(self.scheduler.waiting))
 
         if not self._live.any():
             self.metrics.on_step(0, self.n_slots)

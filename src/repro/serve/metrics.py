@@ -1,8 +1,15 @@
-"""Serving metrics: per-request TTFT / tok/s and engine-level aggregates.
+"""Serving metrics: per-request TTFT / tok/s / SLO and engine aggregates.
 
 The engine reports events through :class:`ServeMetrics` with an injectable
 clock (tests pass a fake; production uses ``time.perf_counter``). Nothing
 here touches the device.
+
+SLO observability: requests carry optional TTFT / end-to-end deadline
+annotations and a priority class; :meth:`ServeMetrics.summary` reports
+per-class latency percentiles and SLO *attainment* (fraction of finished
+deadline-carrying requests that met their deadline), and
+:meth:`ServeMetrics.prometheus` renders the same state in Prometheus text
+exposition format for the HTTP server's ``/metrics`` endpoint.
 """
 
 from __future__ import annotations
@@ -11,6 +18,8 @@ import dataclasses
 import math
 import time
 from typing import Callable, Dict, List, Optional
+
+PRIORITY_CLASSES = ("interactive", "batch")
 
 
 @dataclasses.dataclass
@@ -29,6 +38,12 @@ class RequestMetrics:
     n_decode_steps: int = 0
     n_draft_proposed: int = 0
     n_draft_accepted: int = 0
+    # priority / SLO observability
+    priority: str = "interactive"
+    ttft_slo_s: Optional[float] = None      # deadline, seconds from submit
+    e2e_slo_s: Optional[float] = None
+    n_preemptions: int = 0
+    cancelled: bool = False
 
     @property
     def tokens_per_step(self) -> Optional[float]:
@@ -74,6 +89,19 @@ class RequestMetrics:
             return None
         return self.t_done - self.t_submit
 
+    @property
+    def ttft_slo_met(self) -> Optional[bool]:
+        """None when no deadline was annotated or no first token landed."""
+        if self.ttft_slo_s is None or self.ttft is None:
+            return None
+        return self.ttft <= self.ttft_slo_s
+
+    @property
+    def e2e_slo_met(self) -> Optional[bool]:
+        if self.e2e_slo_s is None or self.e2e_latency is None:
+            return None
+        return self.e2e_latency <= self.e2e_slo_s
+
 
 class ServeMetrics:
     def __init__(self, clock: Callable[[], float] = time.perf_counter):
@@ -86,15 +114,25 @@ class ServeMetrics:
         self.kv_bytes_reserved = 0            # dense n_slots*max_len equiv
         self.kv_bytes_allocated_peak = 0
         self.kv_bytes_logical_peak = 0
+        # priority / SLO observability
+        self.queue_depth = 0
+        self.queue_depth_peak = 0
+        self.n_preemptions: Dict[str, int] = \
+            {cls: 0 for cls in PRIORITY_CLASSES}
+        self.n_cancelled = 0
+        self.n_rejected = 0                   # server backpressure (429)
 
     # ---------------------------------------------------------------- events
     def on_submit(self, req_id: int, n_prompt: int,
-                  t: Optional[float] = None) -> None:
+                  t: Optional[float] = None, priority: str = "interactive",
+                  ttft_slo_s: Optional[float] = None,
+                  e2e_slo_s: Optional[float] = None) -> None:
         t = self.clock() if t is None else t
         if self.t_start is None:
             self.t_start = t
         self.requests[req_id] = RequestMetrics(
-            id=req_id, t_submit=t, n_prompt=n_prompt)
+            id=req_id, t_submit=t, n_prompt=n_prompt, priority=priority,
+            ttft_slo_s=ttft_slo_s, e2e_slo_s=e2e_slo_s)
 
     def on_admit(self, req_id: int) -> None:
         self.requests[req_id].t_admit = self.clock()
@@ -104,6 +142,31 @@ class ServeMetrics:
         m.n_generated += 1
         if m.t_first_token is None:
             m.t_first_token = self.clock()
+
+    def on_preempt(self, req_id: int) -> None:
+        """A running request lost its slot and was requeued. Its generated
+        tokens will be *regenerated* deterministically, so the token count
+        rewinds (on_token fires again for each); t_first_token stays — the
+        stream already delivered those tokens."""
+        m = self.requests[req_id]
+        m.n_preemptions += 1
+        m.n_generated = 0
+        self.n_preemptions[m.priority] = \
+            self.n_preemptions.get(m.priority, 0) + 1
+
+    def on_cancel(self, req_id: int) -> None:
+        """Client abandoned the request (disconnect) — terminal, but not a
+        completion: the request never counts toward done/SLO stats."""
+        self.requests[req_id].cancelled = True
+        self.n_cancelled += 1
+
+    def on_reject(self) -> None:
+        """Server turned a request away at admission (bounded queue full)."""
+        self.n_rejected += 1
+
+    def on_queue_depth(self, depth: int) -> None:
+        self.queue_depth = depth
+        self.queue_depth_peak = max(self.queue_depth_peak, depth)
 
     def on_decode_step(self, req_id: int, n_tokens: int,
                        n_proposed: int = 0, n_accepted: int = 0) -> None:
@@ -159,6 +222,22 @@ class ServeMetrics:
             # nearest-rank: ceil(q*n)-1, clamped
             return xs[max(min(math.ceil(q * len(xs)) - 1, len(xs) - 1), 0)]
 
+        per_class = {}
+        for cls in PRIORITY_CLASSES:
+            cdone = [m for m in done if m.priority == cls]
+            cttft = sorted(m.ttft for m in cdone if m.ttft is not None)
+            ce2e = sorted(m.e2e_latency for m in cdone
+                          if m.e2e_latency is not None)
+            per_class.update({
+                f"{cls}_n_done": len(cdone),
+                f"{cls}_ttft_p50_s": pct(cttft, 0.50),
+                f"{cls}_ttft_p95_s": pct(cttft, 0.95),
+                f"{cls}_e2e_p50_s": pct(ce2e, 0.50),
+                f"{cls}_e2e_p95_s": pct(ce2e, 0.95),
+                f"{cls}_ttft_slo_attainment": self.slo_attainment(cls, "ttft"),
+                f"{cls}_e2e_slo_attainment": self.slo_attainment(cls, "e2e"),
+            })
+
         return {
             "n_requests": len(self.requests),
             "n_done": len(done),
@@ -183,4 +262,90 @@ class ServeMetrics:
             "kv_bytes_reserved": self.kv_bytes_reserved,
             "kv_bytes_allocated_peak": self.kv_bytes_allocated_peak,
             "kv_bytes_logical_peak": self.kv_bytes_logical_peak,
+            "n_preempted": sum(self.n_preemptions.values()),
+            "n_cancelled": self.n_cancelled,
+            "n_rejected": self.n_rejected,
+            "queue_depth_peak": self.queue_depth_peak,
+            **per_class,
         }
+
+    def slo_attainment(self, priority: str, kind: str) -> float:
+        """Fraction of *finished, deadline-carrying* requests of a class
+        that met their deadline (``kind`` is "ttft" or "e2e"). 1.0 when no
+        finished request of the class carries that deadline — a vacuous SLO
+        is trivially attained, and the stable schema keeps dashboards and
+        the bench JSON uniform whether or not deadlines are in use."""
+        attr = "ttft_slo_met" if kind == "ttft" else "e2e_slo_met"
+        verdicts = [getattr(m, attr) for m in self.requests.values()
+                    if m.priority == priority and m.t_done is not None]
+        verdicts = [v for v in verdicts if v is not None]
+        if not verdicts:
+            return 1.0
+        return sum(verdicts) / len(verdicts)
+
+    # ------------------------------------------------------------ prometheus
+    def prometheus(self, extra_gauges: Optional[Dict[str, float]] = None
+                   ) -> str:
+        """Prometheus text exposition format (v0.0.4) for the ``/metrics``
+        endpoint. Counters and gauges cover submissions, completions,
+        tokens, preemptions, cancellations, rejections, queue depth, and
+        per-class latency quantiles + SLO attainment."""
+        s = self.summary()
+        lines: List[str] = []
+
+        def metric(name, mtype, help_, samples):
+            lines.append(f"# HELP {name} {help_}")
+            lines.append(f"# TYPE {name} {mtype}")
+            for labels, value in samples:
+                lab = ("{" + ",".join(f'{k}="{v}"'
+                                      for k, v in labels.items()) + "}"
+                       if labels else "")
+                lines.append(f"{name}{lab} {value:g}")
+
+        by_cls = {cls: [m for m in self.requests.values()
+                        if m.priority == cls] for cls in PRIORITY_CLASSES}
+        metric("repro_serve_requests_total", "counter",
+               "Requests submitted, by priority class.",
+               [({"priority": c}, len(ms)) for c, ms in by_cls.items()])
+        metric("repro_serve_requests_done_total", "counter",
+               "Requests finished (EOS or token budget), by priority class.",
+               [({"priority": c}, s[f"{c}_n_done"]) for c in PRIORITY_CLASSES])
+        metric("repro_serve_tokens_generated_total", "counter",
+               "Tokens streamed out across all finished requests.",
+               [({}, s["total_tokens"])])
+        metric("repro_serve_preemptions_total", "counter",
+               "Requests preempted (pages evicted, requeued), by the "
+               "preempted request's class.",
+               [({"priority": c}, self.n_preemptions.get(c, 0))
+                for c in PRIORITY_CLASSES])
+        metric("repro_serve_cancelled_total", "counter",
+               "Requests cancelled by client disconnect.",
+               [({}, self.n_cancelled)])
+        metric("repro_serve_rejected_total", "counter",
+               "Requests rejected with 429 (admission queue full).",
+               [({}, self.n_rejected)])
+        metric("repro_serve_queue_depth", "gauge",
+               "Current waiting-queue depth.", [({}, self.queue_depth)])
+        metric("repro_serve_queue_depth_peak", "gauge",
+               "Peak waiting-queue depth.", [({}, self.queue_depth_peak)])
+        metric("repro_serve_slot_occupancy", "gauge",
+               "Mean live-slot fraction per engine step.",
+               [({}, s["occupancy_mean"])])
+        metric("repro_serve_ttft_seconds", "summary",
+               "Time to first token, by priority class.",
+               [({"priority": c, "quantile": q}, s[f"{c}_ttft_p{p}_s"])
+                for c in PRIORITY_CLASSES
+                for q, p in (("0.5", 50), ("0.95", 95))])
+        metric("repro_serve_e2e_seconds", "summary",
+               "Submit-to-last-token latency, by priority class.",
+               [({"priority": c, "quantile": q}, s[f"{c}_e2e_p{p}_s"])
+                for c in PRIORITY_CLASSES
+                for q, p in (("0.5", 50), ("0.95", 95))])
+        metric("repro_serve_slo_attainment", "gauge",
+               "Fraction of finished deadline-carrying requests that met "
+               "their deadline (1.0 when none carry one).",
+               [({"priority": c, "slo": k}, s[f"{c}_{k}_slo_attainment"])
+                for c in PRIORITY_CLASSES for k in ("ttft", "e2e")])
+        for name, val in (extra_gauges or {}).items():
+            metric(name, "gauge", "Engine gauge.", [({}, val)])
+        return "\n".join(lines) + "\n"

@@ -1,8 +1,12 @@
-"""Request lifecycle + FCFS admission for the continuous-batching engine.
+"""Request lifecycle + priority admission for the continuous-batching engine.
 
 A :class:`Request` moves WAITING -> PREFILL -> DECODE -> DONE. The
-scheduler owns the waiting queue and the slot free-list; admission is
-strict FCFS into free slots. In the slot-dense engine prompts are
+scheduler owns the waiting queue and the slot free-list; admission orders
+by ``(priority class, arrival)`` — strictly FCFS *within* a class, and an
+``interactive`` request always outranks a ``batch`` one regardless of
+arrival order. ``arrival_seq`` is stamped once at first submit and
+survives preemption, so a preempted request rejoins the queue at its
+original position among its class. In the slot-dense engine prompts are
 right-padded to a *bucket* length (powers of two between ``min_bucket``
 and ``max_len``) so the jitted prefill compiles once per bucket, not once
 per prompt length — the engine's jit-stable-shapes contract. The paged
@@ -10,19 +14,24 @@ engine (``strict_buckets=False``) replaces buckets with fixed-shape
 prefill *chunks*: any prompt with ``prompt + max_new_tokens <= max_len``
 is admittable (no largest-bucket rejection), and admission can
 additionally be gated by a ``can_admit`` predicate (page-pool pressure) —
-strict FCFS still holds: a blocked queue head blocks everyone behind it.
+a blocked queue head blocks everyone behind it (the engine may then
+preempt a lower-priority running slot to unblock it; see
+``Engine._preempt_for_head``).
 """
 
 from __future__ import annotations
 
-import collections
+import bisect
 import dataclasses
 import enum
-from typing import Callable, Deque, List, Optional, Sequence, Tuple
+from typing import Callable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from .sampling import SamplingParams
+
+# admission rank per priority class: lower admits first
+PRIORITIES = {"interactive": 0, "batch": 1}
 
 
 class RequestState(enum.Enum):
@@ -42,6 +51,14 @@ class Request:
     eos_id: int = -1
     sampling: SamplingParams = dataclasses.field(default_factory=SamplingParams)
     arrival_time: Optional[float] = None    # None -> stamped at submit time
+    # priority class: "interactive" admits ahead of "batch" and may preempt
+    # it under page-pool pressure (paged engine)
+    priority: str = "interactive"
+    # SLO deadline annotations (seconds from submit); None = no deadline.
+    # Purely observational: attainment is reported per class in
+    # ServeMetrics, nothing is dropped for missing a deadline.
+    ttft_slo_s: Optional[float] = None
+    e2e_slo_s: Optional[float] = None
 
     # runtime fields owned by the engine
     state: RequestState = RequestState.WAITING
@@ -51,6 +68,10 @@ class Request:
     # prefix + completed chunks) / tokens skipped via prefix reuse
     prefill_pos: int = 0
     n_matched: int = 0
+    # admission order stamp: assigned once at first submit, preserved by
+    # preemption so a requeued request keeps its place within its class
+    arrival_seq: Optional[int] = None
+    n_preemptions: int = 0
 
     def __post_init__(self):
         self.prompt = np.asarray(self.prompt, np.int32).reshape(-1)
@@ -58,6 +79,14 @@ class Request:
             raise ValueError(f"request {self.id}: empty prompt")
         if self.max_new_tokens < 1:
             raise ValueError(f"request {self.id}: max_new_tokens must be >= 1")
+        if self.priority not in PRIORITIES:
+            raise ValueError(
+                f"request {self.id}: unknown priority {self.priority!r} "
+                f"(choose from {sorted(PRIORITIES)})")
+
+    @property
+    def priority_rank(self) -> int:
+        return PRIORITIES[self.priority]
 
 
 def make_buckets(min_bucket: int, max_len: int) -> Tuple[int, ...]:
@@ -72,8 +101,10 @@ def make_buckets(min_bucket: int, max_len: int) -> Tuple[int, ...]:
 
 
 class Scheduler:
-    """FCFS queue + slot free-list. The engine calls :meth:`admit` once per
-    step; the scheduler never touches device state."""
+    """Priority queue + slot free-list. The engine calls :meth:`admit` once
+    per step; the scheduler never touches device state. The waiting list is
+    kept sorted by ``(priority rank, arrival_seq)`` — FCFS within a class,
+    interactive ahead of batch across classes."""
 
     def __init__(self, n_slots: int, max_len: int, min_bucket: int = 16,
                  buckets: Optional[Sequence[int]] = None,
@@ -83,9 +114,10 @@ class Scheduler:
         self.strict_buckets = strict_buckets
         self.buckets = tuple(sorted(buckets)) if buckets else \
             make_buckets(min_bucket, max_len)
-        self.waiting: Deque[Request] = collections.deque()
+        self.waiting: List[Request] = []
         self.free_slots: List[int] = list(range(n_slots))
         self.running: dict = {}             # slot -> Request
+        self._arrival_seq = 0               # monotonic submit stamp
 
     # ------------------------------------------------------------- lifecycle
     def submit(self, req: Request) -> None:
@@ -107,7 +139,11 @@ class Scheduler:
         req.generated = []          # reset runtime fields: resubmit == fresh
         req.prefill_pos = 0
         req.n_matched = 0
-        self.waiting.append(req)
+        if req.arrival_seq is None:     # preemption requeues keep the stamp
+            req.arrival_seq = self._arrival_seq
+            self._arrival_seq += 1
+        bisect.insort(self.waiting, req,
+                      key=lambda r: (r.priority_rank, r.arrival_seq))
 
     def bucket_len(self, prompt_len: int) -> int:
         for b in self.buckets:
@@ -128,12 +164,13 @@ class Scheduler:
 
     def admit(self, can_admit: Optional[Callable[[Request], bool]] = None,
               max_n: Optional[int] = None) -> List[Tuple[Request, int]]:
-        """FCFS: pop waiting requests into free slots (lowest slot first).
-        ``can_admit`` (paged engine: page-pool pressure) gates the queue
-        head — a blocked head blocks everyone behind it, keeping admission
-        order stable regardless of which slots freed when. The paged
-        engine passes ``max_n=1`` and re-checks between admissions, since
-        each admission consumes pages the predicate must see."""
+        """Pop waiting requests into free slots (lowest slot first) in
+        (priority, arrival) order. ``can_admit`` (paged engine: page-pool
+        pressure) gates the queue head — a blocked head blocks everyone
+        behind it, keeping admission order stable regardless of which
+        slots freed when. The paged engine passes ``max_n=1`` and
+        re-checks between admissions, since each admission consumes pages
+        the predicate must see."""
         out = []
         self.free_slots.sort()
         while self.waiting and self.free_slots:
@@ -142,13 +179,30 @@ class Scheduler:
             req = self.waiting[0]
             if can_admit is not None and not can_admit(req):
                 break
-            self.waiting.popleft()
+            self.waiting.pop(0)
             slot = self.free_slots.pop(0)
             req.state = RequestState.PREFILL
             req.slot = slot
             self.running[slot] = req
             out.append((req, slot))
         return out
+
+    def preempt(self, req: Request) -> int:
+        """Pull a *running* request off its slot and requeue it at its
+        original arrival position (``arrival_seq`` survives, runtime fields
+        reset — the resubmit machinery re-prefills it from scratch; greedy
+        and seeded-sampling regeneration are deterministic, so the final
+        output is identical to an uncontended run). Returns the freed slot;
+        the engine owns returning the slot's pages."""
+        if req.slot is None:
+            raise ValueError(f"request {req.id} is not running")
+        slot = req.slot
+        self.running.pop(slot, None)
+        self.free_slots.append(slot)
+        req.slot = None
+        req.n_preemptions += 1
+        self.submit(req)
+        return slot
 
     def finish(self, req: Request) -> None:
         req.state = RequestState.DONE

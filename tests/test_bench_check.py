@@ -1,0 +1,92 @@
+"""The benchmark regression gate's comparison logic (benchmarks/check.py).
+
+Pure-function tests over synthetic BENCH_*.json payloads — the gate's
+verdict must depend only on headline *ratios*, tolerate improvements, and
+flag regressions beyond the threshold.
+"""
+
+import os
+import sys
+
+import pytest
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if _ROOT not in sys.path:                   # benchmarks/ is repo-root level
+    sys.path.insert(0, _ROOT)
+from benchmarks import check                # noqa: E402
+
+
+def _serve(static, continuous):
+    return {"rows": [
+        {"mode": "static", "tok_s": static, "mpd_c": 8, "rate": 256.0},
+        {"mode": "continuous", "tok_s": continuous, "mpd_c": 8,
+         "rate": 256.0},
+        # mixed rows must not perturb the headline
+        {"mode": "mixed", "tok_s": 1.0, "mpd_c": 8, "rate": 256.0},
+    ]}
+
+
+def test_serve_headline_is_a_ratio():
+    # 2x the hardware, same ratio -> identical headline
+    assert check._serve_headline(_serve(100.0, 150.0)) == pytest.approx(1.5)
+    assert check._serve_headline(_serve(200.0, 300.0)) == pytest.approx(1.5)
+
+
+def test_compare_within_threshold_passes():
+    committed = _serve(100.0, 150.0)        # 1.5
+    fresh = _serve(100.0, 120.0)            # 1.2 = 20% drop < 25%
+    ok, msg = check.compare("serve", committed, fresh, threshold=0.25)
+    assert ok, msg
+    assert "ok" in msg
+
+
+def test_compare_regression_fails():
+    committed = _serve(100.0, 150.0)        # 1.5
+    fresh = _serve(100.0, 105.0)            # 1.05 = 30% drop > 25%
+    ok, msg = check.compare("serve", committed, fresh, threshold=0.25)
+    assert not ok
+    assert "REGRESSION" in msg
+
+
+def test_compare_improvement_never_fails():
+    committed = _serve(100.0, 150.0)
+    fresh = _serve(100.0, 400.0)
+    ok, _ = check.compare("serve", committed, fresh, threshold=0.25)
+    assert ok
+
+
+def test_fused_quant_paged_spec_headlines():
+    assert check._fused_headline(
+        {"ffn": {"unfused_us": 30.0, "fused_us": 20.0}}) == pytest.approx(1.5)
+    assert check._quant_headline(
+        {"decode": {"fp_tok_s": 100.0,
+                    "int8_tok_s_measured": 130.0}}) == pytest.approx(1.3)
+    paged = {"rows": [
+        {"cell": "a", "mode": "dense", "tok_s": 100.0},
+        {"cell": "a", "mode": "paged", "tok_s": 140.0},
+        {"cell": "b", "mode": "dense", "tok_s": 100.0},
+        {"cell": "b", "mode": "paged", "tok_s": 90.0},
+    ]}
+    assert check._paged_headline(paged) == pytest.approx(1.4)
+    spec = {"rows": [{"mode": "paged", "k": 0, "speedup": 1.0},
+                     {"mode": "spec", "k": 4, "speedup": 1.9}]}
+    assert check._spec_headline(spec) == pytest.approx(1.9)
+
+
+def test_run_check_skips_missing_committed_file(tmp_path, capsys):
+    # no BENCH_*.json in an empty dir -> every section skipped, exit 0
+    rc = check.run_check(sections=["serve"], repo_root=str(tmp_path))
+    assert rc == 0
+    assert "skipped" in capsys.readouterr().out
+
+
+def test_committed_bench_jsons_have_extractable_headlines():
+    """The real committed files must stay compatible with the gate."""
+    import json
+    for name, (path, extract, _, _) in check.HEADLINES.items():
+        full = os.path.join(_ROOT, path)
+        if not os.path.exists(full):
+            continue
+        with open(full) as f:
+            value = extract(json.load(f))
+        assert value > 0, name
