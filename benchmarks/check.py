@@ -10,6 +10,9 @@ JSON and the machine running the check:
 * ``fused``  — unfused/fused packed-FFN wall-clock ratio (Fig-3 fusion);
 * ``quant``  — int8 over fp decode tok/s;
 * ``paged``  — best paged-over-dense decode ratio across grid cells;
+* ``paged_prefill`` — best dense-gather/flash-kernel prefill
+  KV-bytes-read ratio across prompt depths (deterministic page
+  arithmetic, so the gate is noise-free);
 * ``spec``   — best speculative-decode speedup over the paged baseline.
 
 ``run_check`` re-runs the requested sections fresh (smoke scale, JSON to a
@@ -49,6 +52,10 @@ def _paged_headline(d: dict) -> float:
     return max(ratios)
 
 
+def _paged_prefill_headline(d: dict) -> float:
+    return max(r["kv_read_ratio"] for r in d["prefill"]["ratios"])
+
+
 def _spec_headline(d: dict) -> float:
     return max(r["speedup"] for r in d["rows"] if "speedup" in r)
 
@@ -70,7 +77,12 @@ def _run_quant(out: str) -> None:
 
 def _run_paged(out: str) -> None:
     from benchmarks import paged_bench
-    paged_bench.bench(smoke=True, out=out)
+    paged_bench.bench(smoke=True, out=out, sections=("serve",))
+
+
+def _run_paged_prefill(out: str) -> None:
+    from benchmarks import paged_bench
+    paged_bench.bench(smoke=True, out=out, sections=("prefill",))
 
 
 def _run_spec(out: str) -> None:
@@ -89,6 +101,9 @@ HEADLINES: Dict[str, Tuple[str, Callable[[dict], float],
               "int8/fp decode throughput ratio"),
     "paged": ("BENCH_paged.json", _paged_headline, _run_paged,
               "best paged/dense decode ratio"),
+    "paged_prefill": ("BENCH_paged.json", _paged_prefill_headline,
+                      _run_paged_prefill,
+                      "prefill dense/flash kv-bytes-read ratio"),
     "spec": ("BENCH_spec.json", _spec_headline, _run_spec,
              "best speculative-decode speedup"),
 }

@@ -20,6 +20,19 @@ both memory models and reports, per cell:
 * **prefill tokens computed vs reused** — a shared page-aligned system
   prompt is prefilled once and then served from the prefix trie.
 
+The **prefill section** (``sections=("prefill",)``) measures chunked
+prefill against prompt depth under both attention routes: ``dense`` (the
+jnp gather oracle, reading the full power-of-two-laddered block-table
+width per chunk) vs ``flash`` (the Pallas paged-prefill kernel — real
+lowering on TPU, interpret mode on CPU — reading only pages at/below the
+causal horizon, ∝ actual depth). Rows carry wall-clock TTFT and the
+engine-accounted prefill KV bytes read; the per-depth
+``kv_read_ratio = dense/flash`` is the regression-gated headline
+(deterministic arithmetic — page counts, not timings). On CPU
+``ttft_speedup`` reports the bytes-moved proxy (interpret mode is an
+emulator, so its wall clock is meaningless — same convention as
+quant_bench); on TPU it is the measured TTFT ratio.
+
 ``--smoke`` trims the grid for CI; ``benchmarks/run.py --sections paged``
 prints the same rows in its CSV format.
 """
@@ -96,7 +109,82 @@ def _decode_rate(engine, *, prompt_len, n_steps=30, warm=12, passes=3):
     return sorted(rates)[len(rates) // 2]
 
 
-def bench(*, smoke=True, seed=0, out="BENCH_paged.json", trials=3):
+def _bench_prefill(*, smoke=True, seed=0, trials=2):
+    """Chunked-prefill TTFT + KV-bytes-read vs prompt depth, dense-gather
+    route vs flash-kernel route. Returns ``{"rows": [...], "ratios":
+    [...]}`` — one ratio row per depth."""
+    from repro.kernels import ops
+    from repro.models import build
+    from repro.serve import Engine, Request, ServeMetrics
+
+    cfg = _config()
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    page_size = 8
+    chunk = 32
+    gen = 4
+    depths = [96, 224] if smoke else [192, 448, 960]
+    on_tpu = jax.default_backend() == "tpu"
+    routes = [("dense", "jnp"),
+              ("flash", "pallas" if on_tpu else "interpret")]
+    rng = np.random.default_rng(seed)
+    out = {"rows": [], "ratios": []}
+    saved = ops._PREFILL_BACKEND
+    try:
+        for depth in depths:
+            per_route = {}
+            prompt = rng.integers(0, cfg.vocab, size=depth).astype(np.int32)
+            for route, backend in routes:
+                # the backend is read at jit-trace time: set it BEFORE the
+                # engine builds + warms its chunk jits
+                ops.set_prefill_backend(backend)
+                engine = Engine(model, params, n_slots=2,
+                                max_len=depth + 2 * gen, paged=True,
+                                page_size=page_size,
+                                prefill_chunk_tokens=chunk)
+                engine.warmup()
+                ttfts = []
+                cold_bytes = 0
+                for t in range(trials + 1):        # first run still compiles
+                    engine.metrics = ServeMetrics()
+                    engine.run([Request(id=t, prompt=prompt,
+                                        max_new_tokens=gen)])
+                    summary = engine.metrics.summary()
+                    if t == 0:
+                        # only the cold run walks the full chunk ladder —
+                        # warm repeats trie-hit the prompt and prefill just
+                        # the tail page. Bytes-read is deterministic page
+                        # arithmetic, so compile overhead doesn't taint it.
+                        cold_bytes = summary["prefill_kv_bytes_read"]
+                    else:
+                        ttfts.append(summary["ttft_mean_s"])
+                ttft = sorted(ttfts)[len(ttfts) // 2]
+                per_route[route] = (ttft, cold_bytes)
+                out["rows"].append({
+                    "depth": depth, "route": route, "backend": backend,
+                    "chunk_tokens": chunk, "page_size": page_size,
+                    "ttft_s": round(ttft, 4),
+                    "prefill_kv_bytes_read": cold_bytes,
+                })
+            kv_ratio = per_route["dense"][1] / max(per_route["flash"][1], 1)
+            out["ratios"].append({
+                "depth": depth,
+                "kv_read_ratio": round(kv_ratio, 4),
+                # interpret mode emulates the kernel, so CPU wall clock is
+                # meaningless — report the bytes-moved proxy off-TPU
+                "ttft_speedup": round(
+                    per_route["dense"][0] / max(per_route["flash"][0], 1e-9)
+                    if on_tpu else kv_ratio, 4),
+                "ttft_measured": on_tpu,
+            })
+    finally:
+        ops.set_prefill_backend(saved)
+    return out
+
+
+def bench(*, smoke=True, seed=0, out="BENCH_paged.json", trials=3,
+          sections=("serve", "prefill")):
     from repro.models import build
     from repro.serve import Engine, Request
 
@@ -113,6 +201,8 @@ def bench(*, smoke=True, seed=0, out="BENCH_paged.json", trials=3):
     ]
     if not smoke:
         cells.append(("deep", 512, 160, 128, 64, 24))
+    if "serve" not in sections:
+        cells = []
 
     result = {"meta": {"n_slots": n_slots, "page_size": page_size,
                        "seed": seed, "smoke": smoke, "trials": trials},
@@ -153,6 +243,7 @@ def bench(*, smoke=True, seed=0, out="BENCH_paged.json", trials=3):
                 "queue_wait_p95_s": round(summary["queue_wait_p95_s"], 4),
                 "e2e_p95_s": round(summary["e2e_p95_s"], 4),
                 "prefill_tokens_computed": summary["prefill_tokens_computed"],
+                "prefill_kv_bytes_read": summary["prefill_kv_bytes_read"],
             }
             if mode == "paged":
                 row["prefill_tokens_reused"] = engine.n_prefill_tokens_skipped
@@ -165,6 +256,9 @@ def bench(*, smoke=True, seed=0, out="BENCH_paged.json", trials=3):
             row["decode_tok_s"] = round(
                 _decode_rate(engine, prompt_len=prompt_len), 2)
             result["rows"].append(row)
+    if "prefill" in sections:
+        result["prefill"] = _bench_prefill(smoke=smoke, seed=seed,
+                                           trials=min(trials, 2))
     if out:
         with open(out, "w") as f:
             json.dump(result, f, indent=1)
@@ -186,6 +280,11 @@ def rows(smoke=True, out="BENCH_paged.json"):
                          f"{r['kv_alloc_frac_of_dense']}")
             lines.append(f"paged,{tag}_prefill_reused,"
                          f"{r['prefill_tokens_reused']}")
+    for r in result.get("prefill", {}).get("ratios", []):
+        lines.append(f"paged,prefill_d{r['depth']}_kv_read_ratio,"
+                     f"{r['kv_read_ratio']}")
+        lines.append(f"paged,prefill_d{r['depth']}_ttft_speedup,"
+                     f"{r['ttft_speedup']}")
     return lines
 
 

@@ -241,6 +241,8 @@ def bench(*, smoke=True, seed=0, out="BENCH_serve.json", trials=3):
                         "kv_bytes_allocated_peak":
                             summary["kv_bytes_allocated_peak"],
                         "kv_bytes_reserved": summary["kv_bytes_reserved"],
+                        "prefill_kv_bytes_read":
+                            summary["prefill_kv_bytes_read"],
                     })
                 result["rows"].append(row)
 

@@ -7,6 +7,8 @@
                       int8-weight variant inside)
 - ``paged_attention``: decode-step attention over the paged KV pool
                       (scalar-prefetched block tables, online softmax)
+- ``paged_prefill`` : flash-style chunked-prefill attention over the same
+                      pool (per-tile causal page skip — KV read ∝ depth)
 - ``quant``         : symmetric per-output-channel int8/int4 block
                       quantization (scales, nibble packing, error stats)
 - ``tiling``        : shared grid-tiling policy (pad, don't degrade)

@@ -48,9 +48,17 @@ from . import bdmm as bdmm_kernel
 from . import fused_ffn as ffn_kernel
 from . import masked_matmul as mm_kernel
 from . import paged_attention as paged_attn_kernel
+from . import paged_prefill as paged_prefill_kernel
 from . import ref
 
 _BACKEND = "jnp" if jax.default_backend() != "tpu" else "pallas"
+
+# Prefill-attention override: when None, chunked prefill follows _BACKEND.
+# Settable independently (``--prefill-kernel``) because the flash prefill
+# kernel's interpret mode is the CPU-testable route while the rest of the
+# serve loop stays on the fast jnp oracle. Read at trace time — set it
+# before the engine builds/warms its jits, or their caches go stale.
+_PREFILL_BACKEND: Optional[str] = None
 
 
 def set_backend(name: str) -> None:
@@ -61,6 +69,16 @@ def set_backend(name: str) -> None:
 
 def get_backend() -> str:
     return _BACKEND
+
+
+def set_prefill_backend(name: Optional[str]) -> None:
+    global _PREFILL_BACKEND
+    assert name in (None, "pallas", "interpret", "jnp"), name
+    _PREFILL_BACKEND = name
+
+
+def prefill_backend() -> str:
+    return _PREFILL_BACKEND if _PREFILL_BACKEND is not None else _BACKEND
 
 
 def _act_bwd(activation: Optional[str], z, g):
@@ -369,3 +387,25 @@ def paged_attention_verify(q, k_pages, v_pages, block_tables, lengths):
     return paged_attn_kernel.paged_attention_verify(
         q, k_pages, v_pages, block_tables, lengths,
         interpret=(_BACKEND == "interpret"))
+
+
+def paged_prefill_attention(q, k_pages, v_pages, bt_row, start, chunk_len):
+    """Chunked-prefill attention for one request's ``(Tc, H, Dh)`` chunk
+    against its paged context (chunk K/V already scattered into the pool).
+    Causal per position, valid depth ``start + chunk_len``. Inference-only
+    — no custom VJP.
+
+    Routed on :func:`prefill_backend` (independently overridable via
+    :func:`set_prefill_backend`): the jnp oracle is bitwise-stable against
+    the dense gather+``_attend`` path it replaces (the serve exactness
+    contract); the Pallas routes stream only the pages at or below each
+    query tile's causal horizon, so prefill KV read scales with actual
+    depth instead of the laddered block-table width.
+    """
+    backend = prefill_backend()
+    if backend == "jnp":
+        return ref.paged_prefill_attention_ref(q, k_pages, v_pages, bt_row,
+                                               start, chunk_len)
+    return paged_prefill_kernel.paged_prefill_attention(
+        q, k_pages, v_pages, bt_row, start, chunk_len,
+        interpret=(backend == "interpret"))

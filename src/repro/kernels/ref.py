@@ -189,6 +189,46 @@ def paged_attention_verify_ref(q, k_pages, v_pages, block_tables, lengths):
     return o.reshape(B, Tq, H, Dh)
 
 
+def paged_prefill_attention_ref(q, k_pages, v_pages, bt_row, start, chunk_len):
+    """Chunked-prefill attention oracle for ONE request's chunk against its
+    paged context.
+
+    Gathers the row's pages into a contiguous KV view and runs exactly the
+    dense ``_attend`` computation from ``models/attention.py`` (same gather
+    -> astype order, same einsum contraction, f32 softmax, causal-then-valid
+    ``-1e30`` masking sequence) — so on the jnp route a flash-routed prefill
+    chunk is bitwise identical to the dense gather path it replaces: the
+    extra fully-masked columns exp-underflow to exact zeros, which are exact
+    under any reduction order.
+
+    ``q: (Tc, H, Dh)`` — the chunk's queries at global positions
+    ``start + t``; ``k_pages/v_pages: (n_pages, page_size, Kh, Dh)``;
+    ``bt_row: (P,)`` int32; ``chunk_len`` real tokens (``< Tc`` on the
+    right-padded final chunk; padded rows produce garbage the caller never
+    reads). The chunk's own K/V must already be scattered into the pool.
+    Returns ``(Tc, H, Dh)``.
+    """
+    Tc, H, Dh = q.shape
+    _, page_size, n_kv, _ = k_pages.shape
+    P = bt_row.shape[0]
+    S = P * page_size
+    k = k_pages[bt_row].reshape(1, S, n_kv, Dh).astype(q.dtype)
+    v = v_pages[bt_row].reshape(1, S, n_kv, Dh).astype(q.dtype)
+    g = H // n_kv
+    q5 = q.reshape(1, Tc, n_kv, g, Dh)
+    logits = jnp.einsum("bqkgd,bskd->bkgqs", q5, k).astype(jnp.float32)
+    logits *= Dh ** -0.5
+    q_pos = start + jnp.arange(Tc)
+    kv_pos = jnp.arange(S)
+    cmask = q_pos[:, None] >= kv_pos[None, :]
+    logits = jnp.where(cmask[None, None, None], logits, -1e30)
+    kv_valid = kv_pos < start + chunk_len
+    logits = jnp.where(kv_valid[None, None, None, None, :], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", p.astype(v.dtype), v)
+    return o.reshape(1, Tc, H, Dh)[0]
+
+
 def fused_ffn_quant_ref(x, w_up, w_down, w_gate=None, b_up=None, b_gate=None,
                         b_down=None, s_up=None, s_gate=None, s_down=None,
                         activation: Optional[str] = "silu", precision=None):

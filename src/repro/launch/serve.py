@@ -88,10 +88,13 @@ def _static_main(args, cfg, model, params):
              dt * 1e3, args.batch * (args.gen - 1) / max(dt, 1e-9))
 
 
-def make_requests(cfg, *, n_requests, rate, prompt_len, gen, seed=0):
+def make_requests(cfg, *, n_requests, rate, prompt_len, gen, seed=0,
+                  shared_prefix=0):
     """Synthetic Poisson request stream: exponential inter-arrivals at
     ``rate`` req/s, prompt lengths in [prompt_len/2, prompt_len], output
-    budgets in [gen/2, gen]."""
+    budgets in [gen/2, gen]. ``shared_prefix`` forces the first that many
+    prompt tokens identical across requests (system-prompt shape), so the
+    paged engine's prefix trie gets real hits."""
     from repro.serve import Request, SamplingParams
 
     if rate <= 0:
@@ -100,11 +103,14 @@ def make_requests(cfg, *, n_requests, rate, prompt_len, gen, seed=0):
     data = SyntheticLM(vocab=cfg.vocab, seq_len=prompt_len,
                        global_batch=max(n_requests, 1), seed=seed)
     toks = np.asarray(data.next()["inputs"])
+    if shared_prefix:
+        toks[:, :shared_prefix] = toks[0, :shared_prefix]
     t = 0.0
     out = []
     for i in range(n_requests):
         t += rng.exponential(1.0 / rate)
         plen = int(rng.integers(max(prompt_len // 2, 1), prompt_len + 1))
+        plen = max(plen, min(shared_prefix, prompt_len))
         out.append(Request(
             id=i, prompt=toks[i, :plen],
             max_new_tokens=int(rng.integers(max(gen // 2, 1), gen + 1)),
@@ -176,10 +182,12 @@ def _build_engine(args, model, params):
 
 
 def _continuous_main(args, cfg, model, params):
+    from repro.kernels import ops
+
     engine, mode = _build_engine(args, model, params)
     requests = make_requests(cfg, n_requests=args.requests, rate=args.rate,
                              prompt_len=args.prompt_len, gen=args.gen,
-                             seed=args.seed)
+                             seed=args.seed, shared_prefix=args.shared_prefix)
     summary = serve_stream(engine, requests)
     log.info("%s: %d/%d requests, %d tokens in %.2f s (%.0f tok/s)",
              mode, summary["n_done"], summary["n_requests"],
@@ -195,11 +203,14 @@ def _continuous_main(args, cfg, model, params):
         c = engine.cache
         log.info("paged kv: page_size=%d, pool=%d pages; allocated peak "
                  "%.2f MB vs dense reservation %.2f MB; prefill tokens "
-                 "computed %d (+%d reused via prefix cache)",
+                 "computed %d (+%d reused via prefix cache); prefill kv "
+                 "read %.2f MB [%s kernel]",
                  c.page_size, c.n_pages,
                  summary["kv_bytes_allocated_peak"] / 1e6,
                  summary["kv_bytes_reserved"] / 1e6,
-                 engine.n_prefill_tokens, engine.n_prefill_tokens_skipped)
+                 engine.n_prefill_tokens, engine.n_prefill_tokens_skipped,
+                 summary["prefill_kv_bytes_read"] / 1e6,
+                 ops.prefill_backend())
         if engine.spec_active:
             log.info("spec decode: k=%d, %.2f tokens/step, %.0f%% draft "
                      "acceptance", engine.spec_k,
@@ -333,6 +344,17 @@ def main(argv=None):
     p.add_argument("--prefill-chunk", type=int, default=0,
                    help="paged-mode prefill chunk tokens (page multiple); "
                    "0 = 4 pages")
+    p.add_argument("--prefill-kernel", default="",
+                   choices=("", "pallas", "interpret", "jnp"),
+                   help="chunked-prefill attention backend (paged mode): "
+                   "pallas = flash paged-prefill kernel (TPU), interpret = "
+                   "same kernel in Pallas interpret mode (CPU-testable, "
+                   "slow), jnp = dense gather oracle (bitwise-stable "
+                   "baseline, CPU default); empty = follow the global "
+                   "kernel backend")
+    p.add_argument("--shared-prefix", type=int, default=0,
+                   help="force the first N prompt tokens identical across "
+                   "synthetic requests (exercises the paged prefix trie)")
     p.add_argument("--spec-draft", default="",
                    help="speculative decoding (requires --paged): directory "
                    "with a packed export to deploy as the draft model — "
@@ -379,6 +401,14 @@ def main(argv=None):
     if args.http and args.static:
         raise SystemExit("--http serves the continuous engine; it cannot "
                          "combine with --static")
+    if args.prefill_kernel:
+        if not args.paged:
+            raise SystemExit("--prefill-kernel routes paged chunked "
+                             "prefill; combine with --paged")
+        # must happen before the engine builds/warms its jits — the
+        # backend is read at trace time
+        from repro.kernels import ops
+        ops.set_prefill_backend(args.prefill_kernel)
     cfg, model, params = _load_model(args)
     log.info("serving %s: %s params (mode=%s)", cfg.name,
              f"{model.param_count():,}", cfg.mpd_mode)

@@ -355,10 +355,15 @@ def prefill_chunk_paged(spec: AttentionSpec, params, x, cache, bt_row, slot,
     is the number of real tokens (the final chunk is right-padded).
     ``bt_row: (P,)`` is the request's block-table row. The chunk's K/V is
     scattered into its pages, then the chunk queries attend causally over
-    the request's whole cached context (reused prefix pages included) via a
-    block-table gather — masked columns are exact zeros, so the result is
-    bitwise what a monolithic prefill produces.
+    the request's whole cached context (reused prefix pages included)
+    through :func:`repro.kernels.ops.paged_prefill_attention` — the jnp
+    oracle reproduces the old block-table gather + dense ``_attend``
+    bitwise (masked columns are exact zeros), so the result stays bitwise
+    what a monolithic prefill produces; the flash kernel routes stream
+    only the pages at or below the causal horizon instead of the full
+    table width.
     """
+    from repro.kernels import ops
     B, Tc, _ = x.shape
     assert B == 1
     kp, vp = cache["kp"], cache["vp"]
@@ -384,11 +389,10 @@ def prefill_chunk_paged(spec: AttentionSpec, params, x, cache, bt_row, slot,
         k[0].reshape(n_chunk_pages, page_size, Kh, Dh).astype(kp.dtype))
     vp = vp.at[page_ids].set(
         v[0].reshape(n_chunk_pages, page_size, Kh, Dh).astype(vp.dtype))
-    # gather this request's full context (prefix + the chunk just written)
-    kc = kp[bt_row].reshape(1, P * page_size, Kh, Dh).astype(q.dtype)
-    vc = vp[bt_row].reshape(1, P * page_size, Kh, Dh).astype(q.dtype)
-    kv_valid = (jnp.arange(P * page_size)[None, :] < start + chunk_len)
-    o = _attend(q, kc, vc, q_pos, kv_valid, causal=True)
+    # chunk queries attend over this request's full context (prefix + the
+    # chunk just written) straight off the page pool — no gathered view
+    o = ops.paged_prefill_attention(q[0], kp, vp, bt_row, start, chunk_len)
+    o = shard(o[None], "batch", None, "heads", None)
     y = spec.wo.apply(params["wo"], o.reshape(1, Tc, spec.n_heads * spec.head_dim))
     pos = cache["pos"].at[slot].set(start + chunk_len)
     return y, {"kp": kp, "vp": vp, "pos": pos}

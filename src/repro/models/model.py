@@ -556,7 +556,7 @@ class Model:
         return lg, new_caches
 
     def prefill_chunk(self, params, tokens, caches, bt_row, slot, start,
-                      chunk_len):
+                      chunk_len, final: bool = True):
         """One page-aligned chunk of a single request's prefill (batch 1),
         writing into the paged caches in place of a monolithic
         :meth:`prefill` — the chunked-prefill building block.
@@ -572,7 +572,10 @@ class Model:
 
         Returns ``(logits (1, vocab) at the chunk's last real token,
         caches)`` — the logits are meaningful on the final chunk, where the
-        engine samples the first token.
+        engine samples the first token. ``final`` is static: non-final
+        chunks return ``(None, caches)`` and skip the final norm + unembed
+        entirely (the vocab projection dominates a small chunk's FLOPs, and
+        only the last chunk's logits are ever read).
         """
         cfg = self.cfg
         slot = jnp.asarray(slot, jnp.int32)
@@ -640,6 +643,8 @@ class Model:
 
             x, c_new = jax.lax.scan(body, x, (pstack, cstack))
             new_caches.append(c_new)
+        if not final:
+            return None, new_caches
         x = layers.apply_norm(cfg.norm, params["final_norm"], x)
         x_last = jnp.take_along_axis(
             x, jnp.maximum(chunk_len - 1, 0)[None, None, None], axis=1)[:, 0]

@@ -54,6 +54,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels import ops
+
 from . import sampling as sampling_lib
 from .cache import PagedCache, SlotCache, publish_prefix_shared, share_trie
 from .metrics import ServeMetrics
@@ -151,7 +153,8 @@ class Engine:
             self.prefill_token_budget = (prefill_token_budget
                                          or prefill_chunk_tokens)
             self._prefill_queue: Deque[Request] = collections.deque()
-            self._chunk = jax.jit(self._prefill_chunk_impl)
+            self._chunk = jax.jit(self._prefill_chunk_impl,
+                                  static_argnames=("final",))
             self._decode_paged = jax.jit(self._decode_paged_impl)
             self._bt_dev: Dict[int, jax.Array] = {}
             # observability for the prefix-reuse contract (tests assert a
@@ -222,14 +225,18 @@ class Engine:
         return dev, caches
 
     def _prefill_chunk_impl(self, params, caches, dev, tokens, bt_row, slot,
-                            start, chunk_len, temp, top_k, key):
-        """One prefill chunk fused with first-token sampling + slot arming
-        — one dispatch per chunk. On non-final chunks the sampled token and
-        slot state are garbage that the next chunk (or the final one)
-        overwrites; only the final chunk's result is consumed."""
+                            start, chunk_len, temp, top_k, key, *,
+                            final: bool = True):
+        """One prefill chunk; on the final chunk first-token sampling + slot
+        arming are fused into the same dispatch (admission stays one
+        dispatch). ``final`` is static: non-final chunks skip final norm,
+        unembed AND sampling entirely — only the caches matter, and the
+        returned token is a zero sentinel nothing reads."""
         logits, caches = self.model.prefill_chunk(params, tokens, caches,
                                                   bt_row, slot, start,
-                                                  chunk_len)
+                                                  chunk_len, final=final)
+        if not final:
+            return jnp.zeros((), jnp.int32), caches, dev
         keys = sampling_lib.fold_keys(key[None], jnp.zeros((1,), jnp.int32))
         tok = sampling_lib.sample(logits, temp[None], top_k[None], keys)[0]
         dev = self._set_slot_impl(dev, slot, tok, temp, top_k, key)
@@ -239,9 +246,11 @@ class Engine:
                                   slot, start, chunk_len):
         """Draft-side prefill chunk: same tokens, the draft's own page pool.
         The draft's logits are never sampled during prefill — the pending
-        token comes from the target — so only the caches survive."""
+        token comes from the target — so only the caches survive (every
+        draft chunk runs with ``final=False``: no unembed)."""
         _, dcaches = self.draft_model.prefill_chunk(
-            dparams, tokens, dcaches, bt_row, slot, start, chunk_len)
+            dparams, tokens, dcaches, bt_row, slot, start, chunk_len,
+            final=False)
         return dcaches
 
     def _propose_impl(self, dparams, dcaches, dev, block_tables, live, pos0):
@@ -448,6 +457,7 @@ class Engine:
             ctx_pages = min(_next_pow2(self.cache.pages_for(pos + tc)),
                             self.cache.max_pages)
             sp = req.sampling
+            final = pos + n_real >= plen
             tok_dev, self.cache.caches, self._dev = self._chunk(
                 self.params, self.cache.caches, self._dev, jnp.asarray(toks),
                 jnp.asarray(self.cache.block_tables[req.slot][:ctx_pages]),
@@ -455,7 +465,17 @@ class Engine:
                 jnp.asarray(n_real, jnp.int32),
                 jnp.asarray(sp.temperature, jnp.float32),
                 jnp.asarray(sp.top_k, jnp.int32),
-                sampling_lib.base_key(sp.seed))
+                sampling_lib.base_key(sp.seed), final=final)
+            # KV bytes the chunk's attention read: the flash kernel streams
+            # only pages at/below the causal horizon (∝ actual depth); the
+            # jnp gather path reads the whole laddered table width
+            if ops.prefill_backend() == "jnp":
+                pages_read = ctx_pages
+            else:
+                pages_read = min(self.cache.pages_for(pos + n_real), ctx_pages)
+            self.metrics.on_prefill_kv_read(
+                int(pages_read * self.cache.page_size
+                    * self.cache.token_bytes))
             if self.spec_active:
                 # mirror the chunk into the draft's page pool (one extra
                 # dispatch; its logits are discarded — the target samples)
@@ -501,13 +521,28 @@ class Engine:
         out.append(self.cache.max_pages)
         return out
 
+    def prefill_widths(self) -> List[int]:
+        """The active block-table widths prefill chunks can run at: the
+        decode ladder truncated below the first chunk's width (a chunk
+        always attends over at least ``chunk_tokens`` of context, so the
+        narrower rungs never occur) — one chunk compile per rung per
+        ``final`` variant."""
+        if not self.paged:
+            return []
+        w_min = min(_next_pow2(self.cache.pages_for(self.chunk_tokens)),
+                    self.cache.max_pages)
+        return [w for w in self.decode_widths() if w >= w_min]
+
     def warmup(self) -> None:
         """Pre-compile the paged decode program at every active-width rung
         so steady-state serving never pauses for a mid-stream compile (the
         width grows with the deepest live sequence). In spec mode the
         propose scan and the (k+1)-query verify program compile per rung
-        instead. Results are discarded; engine state is untouched. No-op
-        for the dense engine (one decode shape, compiled on first step)."""
+        instead. The chunked-prefill ladder compiles alongside — every
+        prefill width × {non-final, final} chunk variant (plus the draft
+        mirror in spec mode), against the null page so no real K/V moves.
+        Results are discarded; engine state is untouched. No-op for the
+        dense engine (one decode shape, compiled on first step)."""
         for w in self.decode_widths():
             zbt = jnp.zeros((self.n_slots, w), jnp.int32)
             zlive = jnp.zeros((self.n_slots,), bool)
@@ -521,6 +556,23 @@ class Engine:
             else:
                 self._decode_paged(self.params, self.cache.caches, self._dev,
                                    zbt, zlive)
+        if self.paged:
+            ztoks = jnp.zeros((1, self.chunk_tokens), jnp.int32)
+            zslot = jnp.zeros((), jnp.int32)
+            zstart = jnp.zeros((), jnp.int32)
+            zlen = jnp.ones((), jnp.int32)
+            for w in self.prefill_widths():
+                zrow = jnp.zeros((w,), jnp.int32)   # null page: writes vanish
+                for final in (False, True):
+                    self._chunk(self.params, self.cache.caches, self._dev,
+                                ztoks, zrow, zslot, zstart, zlen,
+                                jnp.zeros((), jnp.float32),
+                                jnp.zeros((), jnp.int32),
+                                sampling_lib.base_key(0), final=final)
+                if self.spec_active:
+                    self._chunk_draft(self.draft_params,
+                                      self.draft_cache.caches, ztoks, zrow,
+                                      zslot, zstart, zlen)
 
     def _live_mask_dev(self) -> jax.Array:
         """Device copy of the liveness mask, re-uploaded only when slot

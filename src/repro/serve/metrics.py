@@ -111,6 +111,7 @@ class ServeMetrics:
         self.t_last: Optional[float] = None
         self._occupancy: List[float] = []     # live-slot fraction per step
         self.prefill_tokens_computed = 0      # excludes prefix-reused tokens
+        self.prefill_kv_bytes_read = 0        # KV streamed by chunk attention
         self.kv_bytes_reserved = 0            # dense n_slots*max_len equiv
         self.kv_bytes_allocated_peak = 0
         self.kv_bytes_logical_peak = 0
@@ -190,6 +191,13 @@ class ServeMetrics:
     def on_prefill_tokens(self, n: int) -> None:
         self.prefill_tokens_computed += n
 
+    def on_prefill_kv_read(self, nbytes: int) -> None:
+        """KV bytes one prefill chunk's attention streamed (all layers).
+        With the flash prefill kernel this grows ∝ actual context depth;
+        the dense gather path reads the full laddered block-table width
+        per chunk, so the ratio between the two is the kernel's win."""
+        self.prefill_kv_bytes_read += nbytes
+
     def on_kv(self, allocated_bytes: int, logical_bytes: int,
               reserved_bytes: int) -> None:
         """KV-memory snapshot for one step. ``allocated`` is what the cache
@@ -259,6 +267,7 @@ class ServeMetrics:
                 / max(sum(m.n_draft_proposed for m in done), 1)
                 if any(m.n_draft_proposed for m in done) else 0.0),
             "prefill_tokens_computed": self.prefill_tokens_computed,
+            "prefill_kv_bytes_read": self.prefill_kv_bytes_read,
             "kv_bytes_reserved": self.kv_bytes_reserved,
             "kv_bytes_allocated_peak": self.kv_bytes_allocated_peak,
             "kv_bytes_logical_peak": self.kv_bytes_logical_peak,

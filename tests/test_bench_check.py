@@ -68,6 +68,11 @@ def test_fused_quant_paged_spec_headlines():
         {"cell": "b", "mode": "paged", "tok_s": 90.0},
     ]}
     assert check._paged_headline(paged) == pytest.approx(1.4)
+    prefill = {"prefill": {"ratios": [
+        {"depth": 96, "kv_read_ratio": 1.2, "ttft_speedup": 1.2},
+        {"depth": 448, "kv_read_ratio": 1.35, "ttft_speedup": 1.35},
+    ]}}
+    assert check._paged_prefill_headline(prefill) == pytest.approx(1.35)
     spec = {"rows": [{"mode": "paged", "k": 0, "speedup": 1.0},
                      {"mode": "spec", "k": 4, "speedup": 1.9}]}
     assert check._spec_headline(spec) == pytest.approx(1.9)

@@ -129,6 +129,27 @@ def test_paged_pool_pressure_admission():
     assert eng.cache.reserved == 0
 
 
+@pytest.mark.parametrize("backend", ["jnp", "interpret"])
+def test_prefill_backend_greedy_parity(backend):
+    """Serve-level parity rows for the chunked-prefill attention routes:
+    the jnp oracle (bitwise vs dense) and the flash kernel in interpret
+    mode must both keep paged greedy output identical to the static
+    reference."""
+    from repro.kernels import ops
+    m, p = _model("olmo-1b")
+    reqs = _requests(m.cfg, 3, seed=11, max_prompt=30, max_gen=8)
+    saved = ops._PREFILL_BACKEND
+    ops.set_prefill_backend(backend)
+    try:
+        eng = Engine(m, p, n_slots=2, max_len=64, paged=True, page_size=8,
+                     prefill_chunk_tokens=16)
+        out = eng.run(reqs)
+    finally:
+        ops.set_prefill_backend(saved)
+    for r in reqs:
+        assert out[r.id] == _reference(m, p, r), (backend, r.id)
+
+
 # -------------------------------------------------------------- prefix reuse
 
 def test_shared_prefix_skips_prefill():
