@@ -191,7 +191,41 @@ def run_mixed(model, params, requests, *, n_slots, max_len):
     return s["total_tokens"] / makespan, s["ttft_mean_s"], makespan, s
 
 
-def bench(*, smoke=True, seed=0, out="BENCH_serve.json", trials=3):
+def run_degraded(model, params, requests, *, n_slots, max_len, stage):
+    """Speculative engine (the target drafting for itself) with the
+    degradation ladder pinned at ``stage``: 0 measures normal spec-on
+    serving, 1 measures the spec-off rung — the throughput/SLO cost of
+    the first degradation step, which the ops decision table quotes."""
+    from repro.launch.serve import serve_stream
+    from repro.serve import (DegradationLadder, Engine, Request, Resilience,
+                             ServeMetrics)
+
+    key = (id(model), n_slots, max_len, "degraded")
+    if key not in _engines:                 # build + compile once per config
+        engine = _engines[key] = Engine(
+            model, params, n_slots=n_slots, max_len=max_len, paged=True,
+            page_size=8, spec_draft=(model, params), spec_k=4,
+            resilience=Resilience(ladder=DegradationLadder()))
+        warm = [Request(id=-1 - i, prompt=np.zeros(len(requests[0].prompt),
+                                                   np.int32), max_new_tokens=2)
+                for i in range(2)]
+        engine.run(warm)
+    engine = _engines[key]
+    engine.params = params          # cache hit must not pin stale weights
+    engine.metrics = ServeMetrics()
+    ladder = engine.resilience.ladder
+    ladder.force(stage)
+    try:
+        s = serve_stream(engine, requests)
+    finally:
+        ladder.force(0)
+        ladder.force(None)
+    makespan = max(m.t_done for m in engine.metrics.requests.values())
+    return s["total_tokens"] / makespan, s["ttft_mean_s"], makespan, s
+
+
+def bench(*, smoke=True, seed=0, out="BENCH_serve.json", trials=3,
+          sections=("modes", "mixed", "degraded")):
     from repro.models import build
 
     # Decode-dominated chat shape: short prompts, long bimodal outputs.
@@ -208,11 +242,15 @@ def bench(*, smoke=True, seed=0, out="BENCH_serve.json", trials=3):
                        "max_gen": max_gen, "n_requests": n_req,
                        "seed": seed, "smoke": smoke, "trials": trials},
               "rows": []}
+    result["meta"]["sections"] = list(sections)
     for c in cs:
+        wants_degraded = "degraded" in sections and c == cs[-1]
+        if not ({"modes", "mixed"} & set(sections) or wants_degraded):
+            continue
         cfg = _config(c)
         model = build(cfg)
         params = model.init(jax.random.PRNGKey(0))
-        for rate in rates:
+        for rate in rates if "modes" in sections else ():
             for mode, runner in (("static", run_static),
                                  ("continuous", run_continuous)):
                 runs = []
@@ -248,34 +286,67 @@ def bench(*, smoke=True, seed=0, out="BENCH_serve.json", trials=3):
 
         # mixed-priority load through the paged engine (preemption on):
         # the per-class SLO row the HTTP frontend's policy is judged by
-        rate = max(rates)
-        runs = []
-        for _ in range(trials):
-            reqs = _mixed_requests(cfg, n=n_req, rate=rate,
-                                   prompt_len=prompt_len, max_gen=max_gen,
-                                   seed=seed)
-            runs.append(run_mixed(model, params, reqs,
-                                  n_slots=n_slots, max_len=max_len))
-        tok_s, ttft, makespan, s = sorted(
-            runs, key=lambda r: r[0])[len(runs) // 2]
-        result["rows"].append({
-            "mode": "mixed", "mpd_c": c, "rate": rate,
-            "tok_s": round(tok_s, 2), "ttft_mean_s": round(ttft, 4),
-            "makespan_s": round(makespan, 3),
-            "n_preempted": s["n_preempted"],
-            "interactive_ttft_p95_s":
-                round(s["interactive_ttft_p95_s"], 4),
-            "batch_ttft_p95_s": round(s["batch_ttft_p95_s"], 4),
-            "interactive_e2e_p95_s":
-                round(s["interactive_e2e_p95_s"], 4),
-            "batch_e2e_p95_s": round(s["batch_e2e_p95_s"], 4),
-            "interactive_ttft_slo_attainment":
-                round(s["interactive_ttft_slo_attainment"], 3),
-            "interactive_e2e_slo_attainment":
-                round(s["interactive_e2e_slo_attainment"], 3),
-            "batch_e2e_slo_attainment":
-                round(s["batch_e2e_slo_attainment"], 3),
-        })
+        if "mixed" in sections:
+            rate = max(rates)
+            runs = []
+            for _ in range(trials):
+                reqs = _mixed_requests(cfg, n=n_req, rate=rate,
+                                       prompt_len=prompt_len, max_gen=max_gen,
+                                       seed=seed)
+                runs.append(run_mixed(model, params, reqs,
+                                      n_slots=n_slots, max_len=max_len))
+            tok_s, ttft, makespan, s = sorted(
+                runs, key=lambda r: r[0])[len(runs) // 2]
+            result["rows"].append({
+                "mode": "mixed", "mpd_c": c, "rate": rate,
+                "tok_s": round(tok_s, 2), "ttft_mean_s": round(ttft, 4),
+                "makespan_s": round(makespan, 3),
+                "n_preempted": s["n_preempted"],
+                "interactive_ttft_p95_s":
+                    round(s["interactive_ttft_p95_s"], 4),
+                "batch_ttft_p95_s": round(s["batch_ttft_p95_s"], 4),
+                "interactive_e2e_p95_s":
+                    round(s["interactive_e2e_p95_s"], 4),
+                "batch_e2e_p95_s": round(s["batch_e2e_p95_s"], 4),
+                "interactive_ttft_slo_attainment":
+                    round(s["interactive_ttft_slo_attainment"], 3),
+                "interactive_e2e_slo_attainment":
+                    round(s["interactive_e2e_slo_attainment"], 3),
+                "batch_e2e_slo_attainment":
+                    round(s["batch_e2e_slo_attainment"], 3),
+            })
+
+        # degraded-mode rows: the same SLO-bearing stream through a spec
+        # engine at ladder stage 0 (spec on) vs stage 1 (spec off) — what
+        # one rung of graceful degradation costs in tok/s and attainment
+        if wants_degraded:
+            rate = max(rates)
+            for stage, mode in ((0, "spec_normal"), (1, "spec_degraded")):
+                runs = []
+                for _ in range(trials):
+                    reqs = _mixed_requests(cfg, n=n_req, rate=rate,
+                                           prompt_len=prompt_len,
+                                           max_gen=max_gen, seed=seed)
+                    runs.append(run_degraded(model, params, reqs,
+                                             n_slots=n_slots,
+                                             max_len=max_len, stage=stage))
+                tok_s, ttft, makespan, s = sorted(
+                    runs, key=lambda r: r[0])[len(runs) // 2]
+                result["rows"].append({
+                    "mode": mode, "mpd_c": c, "rate": rate,
+                    "degradation_stage": stage,
+                    "tok_s": round(tok_s, 2),
+                    "ttft_mean_s": round(ttft, 4),
+                    "makespan_s": round(makespan, 3),
+                    "tokens_per_step":
+                        round(s["tokens_per_step_mean"], 3),
+                    "interactive_ttft_slo_attainment":
+                        round(s["interactive_ttft_slo_attainment"], 3),
+                    "interactive_e2e_slo_attainment":
+                        round(s["interactive_e2e_slo_attainment"], 3),
+                    "batch_e2e_slo_attainment":
+                        round(s["batch_e2e_slo_attainment"], 3),
+                })
     if out:
         with open(out, "w") as f:
             json.dump(result, f, indent=1)
@@ -290,6 +361,14 @@ def rows(smoke=True, out="BENCH_serve.json"):
         tag = f"{r['mode']}_c{r['mpd_c']}_rate{int(r['rate'])}"
         lines.append(f"serve,{tag}_tok_s,{r['tok_s']}")
         lines.append(f"serve,{tag}_ttft_ms,{round(r['ttft_mean_s']*1e3, 1)}")
+        if r["mode"] in ("spec_normal", "spec_degraded"):
+            lines.append(f"serve,{tag}_tokens_per_step,"
+                         f"{r['tokens_per_step']}")
+            lines.append(f"serve,{tag}_interactive_e2e_slo,"
+                         f"{r['interactive_e2e_slo_attainment']}")
+            lines.append(f"serve,{tag}_batch_e2e_slo,"
+                         f"{r['batch_e2e_slo_attainment']}")
+            continue
         if r["mode"] == "mixed":
             for cls in ("interactive", "batch"):
                 lines.append(

@@ -18,7 +18,11 @@ Flags used by the CI smoke job:
   serving and check every streamed token against a direct-engine greedy
   run — the frontend must be an exact window onto the engine;
 * ``--check-metrics``  fetch ``/metrics`` afterwards and assert the
-  per-class SLO-attainment series is present.
+  per-class SLO-attainment series is present;
+* ``--check-chaos-metrics``  (chaos smoke: the server was launched with
+  ``--chaos-schedule``) additionally assert the fault-injection and
+  quarantine counters are non-zero and the degradation-stage gauge is
+  exported.
 """
 
 import argparse
@@ -128,6 +132,9 @@ def main():
                     help="--verify: packed export the server is serving")
     ap.add_argument("--check-metrics", action="store_true",
                     help="assert /metrics carries the SLO series")
+    ap.add_argument("--check-chaos-metrics", action="store_true",
+                    help="assert /metrics shows injected faults + "
+                    "quarantines (server running with --chaos-schedule)")
     args = ap.parse_args()
 
     prompts = [[3, 1, 4, 1, 5, 9, 2, 6], [2, 7, 1, 8, 2, 8, 1, 8, 2, 8]]
@@ -171,6 +178,27 @@ def main():
             if series not in text:
                 raise SystemExit(f"/metrics missing series: {series}")
         print("check-metrics: SLO attainment series present")
+
+    if args.check_chaos_metrics:
+        text = asyncio.run(fetch_metrics(args.host, args.port))
+
+        def series_total(name):
+            return sum(float(line.rsplit(" ", 1)[1])
+                       for line in text.splitlines()
+                       if line.startswith(name))
+
+        injected = series_total("repro_serve_faults_injected_total")
+        quarantines = series_total("repro_serve_quarantines_total")
+        if injected <= 0:
+            raise SystemExit("chaos run but repro_serve_faults_injected_"
+                             f"total == {injected}")
+        if quarantines <= 0:
+            raise SystemExit("chaos run but repro_serve_quarantines_total "
+                             f"== {quarantines}")
+        if "repro_serve_degradation_stage" not in text:
+            raise SystemExit("/metrics missing repro_serve_degradation_stage")
+        print(f"check-chaos-metrics: faults_injected={injected:.0f} "
+              f"quarantines={quarantines:.0f}, degradation gauge present")
 
     print("ok")
     return 0

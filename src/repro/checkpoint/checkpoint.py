@@ -38,6 +38,23 @@ _SAVE_LOCK = threading.Lock()
 _PENDING: list = []
 
 
+class ArtifactCorruptError(RuntimeError):
+    """A packed deployment artifact failed integrity verification.
+
+    Raised by :func:`load_packed` when the manifest is unreadable, a shard
+    fails its per-leaf crc32, or the artifact-level checksum written by
+    :func:`export_packed` does not match the bytes on disk."""
+
+
+def _tree_crc32(tree) -> int:
+    """Chained crc32 over every leaf of ``tree`` in flatten order."""
+    flat, _ = _flatten_with_paths(tree)
+    c = 0
+    for _, v in flat:
+        c = zlib.crc32(np.ascontiguousarray(np.asarray(v)).tobytes(), c)
+    return c
+
+
 def _flatten_with_paths(tree):
     flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
     out = []
@@ -214,6 +231,10 @@ def export_packed(ckpt_dir: str, step: int, model, params,
     if quantize == "int4":
         params_pk = export_lib.map_quantized_leaves(
             model_pk, params_pk, lambda q, lin: quant_lib.pack_int4(q))
+    # artifact-level checksum over the *stored* params (post int4 packing) —
+    # load_packed recomputes this before unpacking, catching any corruption
+    # the per-leaf crcs miss (e.g. a manifest edit swapping leaf names)
+    extra["artifact_crc32"] = _tree_crc32(params_pk)
     return save(os.path.join(ckpt_dir, PACKED_SUBDIR), step,
                 {"params": params_pk}, extra=extra, blocking=blocking)
 
@@ -247,7 +268,12 @@ def load_packed(ckpt_dir: str, step: Optional[int] = None):
         step = latest_step(d)
         if step is None:
             raise FileNotFoundError(f"no packed export under {d}")
-    extra = load_extra(d, step)
+    try:
+        extra = load_extra(d, step)
+    except Exception as e:
+        raise ArtifactCorruptError(
+            f"packed artifact at {d} step {step}: unreadable manifest "
+            f"({e})") from e
     model = build(_config_from_dict(extra["packed_config"]))
     if extra.get("perm_fused"):
         export_lib.apply_perm_fusion(model)  # spec-only; params pre-rewritten
@@ -265,7 +291,16 @@ def load_packed(ckpt_dir: str, step: Optional[int] = None):
             like_p = jax.eval_shape(
                 lambda p: export_lib.map_quantized_leaves(
                     model, p, lambda q, lin: quant_lib.pack_int4(q)), like_p)
-    params = restore(d, step, {"params": like_p})["params"]
+    try:
+        params = restore(d, step, {"params": like_p})["params"]
+    except Exception as e:  # bad zip, npy header, leaf crc, missing leaf …
+        raise ArtifactCorruptError(
+            f"packed artifact at {d} step {step}: {e}") from e
+    want_crc = extra.get("artifact_crc32")  # absent in pre-checksum exports
+    if want_crc is not None and _tree_crc32(params) != want_crc:
+        raise ArtifactCorruptError(
+            f"packed artifact at {d} step {step}: artifact checksum "
+            f"mismatch (manifest {want_crc})")
     if qmode == "int4":
         # execution format is int8: unpack nibbles once at deploy time
         params = export_lib.map_quantized_leaves(

@@ -157,7 +157,24 @@ def _load_spec_draft(args):
     return draft, draft_params
 
 
-def _build_engine(args, model, params):
+def _build_resilience(args, *, chaos=True):
+    """CLI engines always get the degradation ladder (the production
+    posture); a fault injector rides along only when ``--chaos-schedule``
+    is set (and never in the ``chaos=False`` baseline of --chaos-verify)."""
+    from repro.serve import (DegradationLadder, FaultInjector, Resilience,
+                             parse_schedule)
+
+    injector = None
+    if chaos and args.chaos_schedule:
+        schedule = parse_schedule(args.chaos_schedule)
+        injector = FaultInjector(schedule, seed=args.chaos_seed)
+        log.info("chaos: %d fault specs from %r (seed %d)",
+                 len(schedule), args.chaos_schedule, args.chaos_seed)
+    return Resilience(injector=injector, ladder=DegradationLadder(),
+                      seed=args.chaos_seed)
+
+
+def _build_engine(args, model, params, *, chaos=True):
     """Construct the continuous-batching engine from CLI flags. Shared by
     the synthetic-stream driver and the ``--http`` frontend. Returns
     ``(engine, mode_label)``."""
@@ -167,16 +184,19 @@ def _build_engine(args, model, params):
     if args.spec_draft and not args.paged:
         raise SystemExit("--spec-draft requires --paged (the verify window "
                          "scatters into paged KV)")
+    res = _build_resilience(args, chaos=chaos)
     if args.paged:
         spec_draft = _load_spec_draft(args) if args.spec_draft else None
         engine = Engine(model, params, n_slots=args.slots, max_len=max_len,
                         paged=True, page_size=args.page_size,
                         n_pages=args.pages or None,
                         prefill_chunk_tokens=args.prefill_chunk or None,
-                        spec_draft=spec_draft, spec_k=args.spec_k)
+                        spec_draft=spec_draft, spec_k=args.spec_k,
+                        resilience=res)
         mode = "paged+spec" if engine.spec_active else "paged"
     else:
-        engine = Engine(model, params, n_slots=args.slots, max_len=max_len)
+        engine = Engine(model, params, n_slots=args.slots, max_len=max_len,
+                        resilience=res)
         mode = "continuous"
     return engine, mode
 
@@ -216,6 +236,36 @@ def _continuous_main(args, cfg, model, params):
                      "acceptance", engine.spec_k,
                      summary["tokens_per_step_mean"],
                      summary["draft_acceptance_rate"] * 100)
+    res = engine.resilience
+    if res.injector is not None or summary["degradation_transitions"]:
+        log.info("resilience: %s", res.summary())
+    if args.chaos_verify:
+        _chaos_verify(args, cfg, model, params, requests)
+
+
+def _chaos_verify(args, cfg, model, params, chaos_requests):
+    """Re-run the same request stream on a fault-free engine and demand
+    that every request the chaos run completed normally produced the
+    identical token sequence. Exits non-zero on any divergence — this is
+    the CI proof that quarantine/retry never perturbs surviving traffic."""
+    engine, _ = _build_engine(args, model, params, chaos=False)
+    baseline = make_requests(cfg, n_requests=args.requests, rate=args.rate,
+                             prompt_len=args.prompt_len, gen=args.gen,
+                             seed=args.seed, shared_prefix=args.shared_prefix)
+    serve_stream(engine, baseline)
+    base = {r.id: list(r.generated) for r in baseline}
+    aborted = [r.id for r in chaos_requests
+               if r.finish_reason in ("fault", "deadline")]
+    mismatched = [r.id for r in chaos_requests
+                  if r.id not in aborted and list(r.generated) != base[r.id]]
+    if mismatched:
+        raise SystemExit(
+            f"chaos-verify FAILED: requests {mismatched} diverged from the "
+            "fault-free baseline")
+    log.info("chaos-verify OK: %d/%d requests token-identical to fault-free "
+             "baseline (%d aborted by injected faults)",
+             len(chaos_requests) - len(aborted), len(chaos_requests),
+             len(aborted))
 
 
 def _http_main(args, cfg, model, params):
@@ -372,6 +422,17 @@ def main(argv=None):
                    help="--http admission-queue bound; beyond it new "
                    "requests get 429 + Retry-After")
     p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--chaos-schedule", default="",
+                   help="deterministic fault injection: a builtin schedule "
+                   "name ('storm'), inline JSON list of fault specs, or "
+                   "@file.json; faults fire at exact engine steps, keyed by "
+                   "--chaos-seed")
+    p.add_argument("--chaos-seed", type=int, default=0,
+                   help="seed for injected fault values / retry jitter")
+    p.add_argument("--chaos-verify", action="store_true",
+                   help="after the chaos run, replay the identical request "
+                   "stream on a fault-free engine and exit non-zero unless "
+                   "every normally-completed request is token-identical")
     p.add_argument("--mpd-c", type=int, default=0, help="0 = config default")
     p.add_argument("--mpd-fuse", action="store_true",
                    help="Fig-3 permutation fusion (fused packed FFN kernel)")
@@ -409,7 +470,19 @@ def main(argv=None):
         # backend is read at trace time
         from repro.kernels import ops
         ops.set_prefill_backend(args.prefill_kernel)
-    cfg, model, params = _load_model(args)
+    if args.chaos_verify and not args.chaos_schedule:
+        raise SystemExit("--chaos-verify needs --chaos-schedule")
+    if args.chaos_verify and args.http:
+        raise SystemExit("--chaos-verify drives the synthetic stream; it "
+                         "cannot combine with --http")
+    try:
+        cfg, model, params = _load_model(args)
+    except SystemExit:
+        raise
+    except Exception as e:
+        # startup must fail with one clear line, never a traceback wall —
+        # a corrupt packed artifact lands here as ArtifactCorruptError
+        raise SystemExit(f"startup failed: {type(e).__name__}: {e}")
     log.info("serving %s: %s params (mode=%s)", cfg.name,
              f"{model.param_count():,}", cfg.mpd_mode)
 

@@ -13,12 +13,22 @@ Speculative decoding (``Engine(..., spec_draft=(model, params))``) rides
 on the paged model: a draft proposes k tokens against its own page pool,
 the target verifies the window in one dispatch, and draft+target share
 one prefix trie.
+
+``resilience`` adds the fault-tolerance layer: a deterministic seeded
+``FaultInjector`` (chaos testing), a per-slot watchdog that quarantines
+non-finite logits without perturbing co-batched requests, a reversible
+``DegradationLadder`` (spec off -> prefix flush -> load shed), and
+deadline/retry policy — all bundled into ``Resilience`` and passed as
+``Engine(..., resilience=...)``.
 """
 
 from .cache import (PagedCache, PagePool, PrefixTrie, SlotCache,
                     publish_prefix_shared, share_trie)
 from .engine import Engine
 from .metrics import RequestMetrics, ServeMetrics
+from .resilience import (STAGE_NAMES, DegradationLadder, FaultInjector,
+                         FaultSpec, InjectedFault, Resilience, parse_schedule,
+                         storm_schedule)
 from .sampling import SamplingParams, sample, spec_accept
 from .scheduler import (PRIORITIES, Request, RequestState, Scheduler,
                         make_buckets)
@@ -30,4 +40,6 @@ __all__ = [
     "ServeMetrics", "RequestMetrics", "GenerateServer",
     "SamplingParams", "sample", "spec_accept", "Request", "RequestState",
     "Scheduler", "make_buckets", "PRIORITIES",
+    "FaultInjector", "FaultSpec", "InjectedFault", "DegradationLadder",
+    "Resilience", "parse_schedule", "storm_schedule", "STAGE_NAMES",
 ]

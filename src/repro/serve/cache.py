@@ -353,6 +353,15 @@ class PagedCache:
         # recurrent state cannot be reconstructed from a matched prefix
         self.prefix_cache_enabled = all(
             s["kind"] in ("attn", "attn_moe") for s in model.block_specs)
+        # degradation ladder: at the flush_prefix stage the engine stops
+        # publishing new prefixes (and has flushed the trie); correctness
+        # is unchanged — misses just recompute
+        self.publish_enabled = True
+        # fault-injection seam (site "pool_exhaust"): when armed, the
+        # injector *withholds* pages from available() — pure admission
+        # pressure, never a failed allocation, so allocator bookkeeping
+        # stays exact under any schedule
+        self.injector = None
 
         # bytes accounting (attention K/V only — recurrent state is the
         # same fixed size under both memory models)
@@ -378,8 +387,11 @@ class PagedCache:
         reservations. Counting only *currently evictable* leaves here
         would under-report deep cached chains and livelock admission
         (can_admit refusing forever what _alloc_page could satisfy)."""
-        return (self.pool.free_count + self.trie.reclaimable_count()
-                - self.reserved)
+        avail = (self.pool.free_count + self.trie.reclaimable_count()
+                 - self.reserved)
+        if self.injector is not None:
+            avail -= self.injector.withheld_pages()
+        return avail
 
     # ------------------------------------------------------------- admission
     def _match_nodes(self, prompt: np.ndarray, touch: bool = True) -> List[Any]:
@@ -454,7 +466,7 @@ class PagedCache:
         publishing O(chunk): pages before it are already cached (matched
         prefix or an earlier chunk's publish) — re-keying the whole prefix
         per chunk would be quadratic in prompt length on the host."""
-        if not self.prefix_cache_enabled:
+        if not self.prefix_cache_enabled or not self.publish_enabled:
             return
         assert len(self.trie.pools) == 1, \
             "shared trie: publish via publish_prefix_shared"
@@ -515,6 +527,18 @@ class PagedCache:
         self._slot_reserved[slot] = 0
         self.dirty = True
 
+    def flush_trie(self) -> int:
+        """Degradation-ladder stage 2: cascade-evict every reclaimable
+        trie node, returning trie-only pages to the free list(s). Pages
+        also held by a live request keep that request's refs — only the
+        trie's own holds drop, so block tables and conservation are
+        untouched. With a shared trie one flush drains both pools (nodes
+        hold a page per pool). Returns the number of nodes evicted."""
+        n = 0
+        while self.trie.evict_one() is not None:
+            n += 1
+        return n
+
     def preempt_slot(self, slot: int) -> int:
         """Preemptively evict a *live* slot: drop the request's refs on its
         pages and its outstanding reservation, exactly like a finish-time
@@ -556,7 +580,7 @@ def publish_prefix_shared(caches: List[PagedCache], prompt: np.ndarray,
     the slot's full, already-prefilled prompt pages as joint (per-pool)
     nodes. All caches must have prefilled the same token range into the
     same slot before this runs."""
-    if not all(c.prefix_cache_enabled for c in caches):
+    if not all(c.prefix_cache_enabled and c.publish_enabled for c in caches):
         return
     trie = caches[0].trie
     assert all(c.trie is trie for c in caches), "caches must share one trie"

@@ -48,6 +48,7 @@ from __future__ import annotations
 
 import collections
 import logging
+import time
 from typing import Callable, Deque, Dict, List, Optional, Sequence
 
 import jax
@@ -59,6 +60,7 @@ from repro.kernels import ops
 from . import sampling as sampling_lib
 from .cache import PagedCache, SlotCache, publish_prefix_shared, share_trie
 from .metrics import ServeMetrics
+from .resilience import STAGE_NAMES, InjectedFault, Resilience
 from .scheduler import Request, RequestState, Scheduler
 
 log = logging.getLogger("repro.serve.engine")
@@ -78,7 +80,8 @@ class Engine:
                  n_pages: Optional[int] = None,
                  prefill_chunk_tokens: Optional[int] = None,
                  prefill_token_budget: Optional[int] = None,
-                 spec_draft=None, spec_k: int = 4, preemption: bool = True):
+                 spec_draft=None, spec_k: int = 4, preemption: bool = True,
+                 resilience: Optional[Resilience] = None):
         cfg = model.cfg
         if not cfg.causal:
             raise ValueError(f"{cfg.name}: encoder-only arch has no decode step")
@@ -93,6 +96,19 @@ class Engine:
         self.paged = paged
         self.metrics = metrics if metrics is not None else ServeMetrics()
         self.step_count = 0
+
+        # ---- resilience: the watchdog (per-step non-finite logit detection
+        # + quarantine) is always on; the chaos injector and degradation
+        # ladder activate when the caller passes a configured bundle
+        # (launch.serve wires one; bare engines get an inert default).
+        self.resilience = resilience if resilience is not None else Resilience()
+        if self.resilience.injector is not None:
+            self.resilience.injector.on_inject = self.metrics.on_fault_injected
+        if self.resilience.ladder is not None:
+            self.resilience.ladder.on_transition = self._on_ladder_transition
+        self.n_quarantines = 0
+        self.n_fault_failures = 0
+        self.n_deadline_aborts = 0
 
         # ---- speculative decoding (paged only): a compressed draft model
         # proposes spec_k tokens per step; the target verifies the window in
@@ -128,10 +144,12 @@ class Engine:
             self.cache = PagedCache(model, n_slots, max_len,
                                     page_size=page_size, n_pages=n_pages,
                                     dtype=dtype, slack_tokens=slack)
+            self.cache.injector = self.resilience.injector
             if self.spec_active:
                 self.draft_cache = PagedCache(
                     self.draft_model, n_slots, max_len, page_size=page_size,
                     n_pages=n_pages, dtype=dtype, slack_tokens=slack)
+                self.draft_cache.injector = self.resilience.injector
                 # ONE token-keyed trie across both pools: draft and target
                 # hit shared prefixes as a unit (trie hit counted once)
                 share_trie([self.cache, self.draft_cache])
@@ -178,6 +196,10 @@ class Engine:
         }
         self._live = np.zeros((n_slots,), bool)     # host-side liveness
         self._live_dev = None                       # device copy, lazy-synced
+        # fault seam: additive per-slot logit poison. Always an operand of
+        # the decode/verify programs (one compiled program with or without
+        # chaos); zeros unless the injector schedules a NaN/Inf this step.
+        self._zero_poison = jnp.zeros((n_slots,), jnp.float32)
 
         self._decode = jax.jit(self._decode_impl)
         self._clear_slot = jax.jit(self._clear_slot_impl)
@@ -208,21 +230,30 @@ class Engine:
         dev = self._set_slot_impl(dev, slot, tok, temp, top_k, key)
         return tok, caches, dev
 
-    def _decode_impl(self, params, caches, dev):
+    def _decode_impl(self, params, caches, dev, poison):
         logits, caches = self.model.decode_step(params, dev["tokens"], caches)
+        # fault seam + watchdog: the injector's per-slot poison adds here
+        # (zeros in normal operation), and the per-slot finite check rides
+        # the same dispatch — non-finite rows are quarantined on the host,
+        # their sampled garbage token never emitted
+        logits = logits + poison[:, None]
+        ok = jnp.isfinite(logits).all(axis=-1)
         keys = sampling_lib.fold_keys(dev["keys"], dev["counters"])
         tokens = sampling_lib.sample(logits, dev["temps"], dev["top_ks"], keys)
         dev = dict(dev, tokens=tokens, counters=dev["counters"] + 1)
-        return dev, caches
+        return dev, caches, ok
 
-    def _decode_paged_impl(self, params, caches, dev, block_tables, live):
+    def _decode_paged_impl(self, params, caches, dev, block_tables, live,
+                           poison):
         logits, caches = self.model.decode_step(params, dev["tokens"], caches,
                                                 block_tables=block_tables,
                                                 live=live)
+        logits = logits + poison[:, None]
+        ok = jnp.isfinite(logits).all(axis=-1)
         keys = sampling_lib.fold_keys(dev["keys"], dev["counters"])
         tokens = sampling_lib.sample(logits, dev["temps"], dev["top_ks"], keys)
         dev = dict(dev, tokens=tokens, counters=dev["counters"] + 1)
-        return dev, caches
+        return dev, caches, ok
 
     def _prefill_chunk_impl(self, params, caches, dev, tokens, bt_row, slot,
                             start, chunk_len, temp, top_k, key, *,
@@ -253,7 +284,8 @@ class Engine:
             final=False)
         return dcaches
 
-    def _propose_impl(self, dparams, dcaches, dev, block_tables, live, pos0):
+    def _propose_impl(self, dparams, dcaches, dev, block_tables, live, pos0,
+                      poison):
         """Draft-propose: ``spec_k`` decode steps of the draft model in one
         jitted scan, starting from the host-authoritative accepted depth
         ``pos0``. Feeds the pending token first, so the draft cache ends
@@ -267,6 +299,10 @@ class Engine:
             caches, toks = carry
             logits, caches = self.draft_model.decode_step(
                 dparams, toks, caches, block_tables=block_tables, live=live)
+            # draft_logits fault site: poisoned proposals yield non-finite
+            # q, which the verify watchdog catches (the target never emits
+            # a token derived from a poisoned draft)
+            logits = logits + poison[:, None]
             # per-draft-position keys: salts 3.. (accept/resample use 1, 2)
             keys = jax.vmap(jax.random.fold_in, in_axes=(0, None))(base, 3 + i)
             nxt, q = sampling_lib.propose_token(logits, dev["temps"],
@@ -280,16 +316,22 @@ class Engine:
                 dcaches)
 
     def _verify_impl(self, params, caches, dev, block_tables, live, pos0,
-                     draft_toks, draft_q):
+                     draft_toks, draft_q, poison):
         """Target-verify: score the (k+1)-token window [pending, d_1..d_k]
         in ONE dispatch, run acceptance in-graph, and advance the sampling
         state by the per-row acceptance count. Returns the updated device
-        state, caches, the emitted-token window (B, k+1) and n_accepted
-        (B,) — the host emits ``out[:n+1]`` per live slot."""
+        state, caches, the emitted-token window (B, k+1), n_accepted (B,)
+        — the host emits ``out[:n+1]`` per live slot — and the per-slot
+        watchdog verdict ``ok`` (finite target logits AND finite draft
+        proposal distributions; a poisoned draft must not leak through
+        acceptance resampling)."""
         caches = self.model.set_paged_pos(caches, pos0)
         window = jnp.concatenate([dev["tokens"][:, None], draft_toks], axis=1)
         logits, caches = self.model.verify_step(params, window, caches,
                                                 block_tables, live=live)
+        logits = logits + poison[:, None, None]
+        ok = (jnp.isfinite(logits).all(axis=(-1, -2))
+              & jnp.isfinite(draft_q).all(axis=(-1, -2)))
         base = sampling_lib.fold_keys(dev["keys"], dev["counters"])
         out, n_acc = sampling_lib.spec_accept(
             logits, draft_toks, draft_q, dev["temps"], dev["top_ks"], base)
@@ -298,7 +340,7 @@ class Engine:
         dev = dict(dev,
                    tokens=jnp.where(live, new_tok, dev["tokens"]),
                    counters=dev["counters"] + adv)
-        return dev, caches, out, n_acc
+        return dev, caches, out, n_acc, ok
 
     def _set_slot_impl(self, dev, slot, tok, temp, top_k, key):
         return {
@@ -396,7 +438,15 @@ class Engine:
         (the caller retries admission, which re-checks capacity)."""
         if not self.preemption or not self.scheduler.waiting:
             return False
-        head = self.scheduler.waiting[0]
+        # the head is the first *eligible* waiting request — a quarantined
+        # request still in retry backoff is skipped by admission, so
+        # evicting victims on its behalf makes no progress (the victim
+        # just re-admits off its trie-published prefix, and the admission
+        # loop wedges preempting it over and over within one step)
+        head = next((r for r in self.scheduler.waiting
+                     if self._retry_eligible(r)), None)
+        if head is None:
+            return False
         victims = [r for r in self.scheduler.running.values()
                    if r.priority_rank > head.priority_rank]
         if not victims:
@@ -550,12 +600,17 @@ class Engine:
                 zpos = jnp.zeros((self.n_slots,), jnp.int32)
                 dt, dq, _ = self._propose(self.draft_params,
                                           self.draft_cache.caches, self._dev,
-                                          zbt, zlive, zpos)
+                                          zbt, zlive, zpos, self._zero_poison)
                 self._verify(self.params, self.cache.caches, self._dev, zbt,
-                             zlive, zpos, dt, dq)
+                             zlive, zpos, dt, dq, self._zero_poison)
+                # the degradation ladder can suspend spec mid-flight: the
+                # plain-decode fallback must be warm too, or the first
+                # degraded step pauses for a compile
+                self._decode_paged(self.params, self.cache.caches, self._dev,
+                                   zbt, zlive, self._zero_poison)
             else:
                 self._decode_paged(self.params, self.cache.caches, self._dev,
-                                   zbt, zlive)
+                                   zbt, zlive, self._zero_poison)
         if self.paged:
             ztoks = jnp.zeros((1, self.chunk_tokens), jnp.int32)
             zslot = jnp.zeros((), jnp.int32)
@@ -645,24 +700,205 @@ class Engine:
                                int(logical * self.cache.token_bytes),
                                self.cache.kv_bytes)
 
+    # ----------------------------------------------------------- resilience
+    def _poison_dev(self, site: str) -> jax.Array:
+        """Per-slot additive logit poison for this step (zeros unless the
+        injector schedules NaN/Inf at ``site``)."""
+        inj = self.resilience.injector
+        if inj is not None:
+            vec = inj.poison(site, inj.step, self.n_slots)
+            if vec is not None:
+                return jnp.asarray(vec)
+        return self._zero_poison
+
+    def _retry_eligible(self, req: Request) -> bool:
+        """Quarantined requests wait out their backoff window; everyone
+        else admits immediately. Passed to Scheduler.admit as the *skip*
+        predicate (an ineligible request never blocks the queue)."""
+        return req.retry_at_step <= self.step_count
+
+    def _fail_request(self, req: Request, reason: str) -> None:
+        """Terminal failure: free everything the request holds within this
+        step and surface ``finish_reason`` through done_cb."""
+        slot = req.slot
+        if self.paged:
+            try:
+                self._prefill_queue.remove(req)
+            except ValueError:
+                pass
+        req.finish_reason = reason
+        self.scheduler.finish(req)
+        self.metrics.on_abort(req.id, reason)
+        if slot is not None:
+            if self.paged:
+                self.cache.free_slot(slot)
+                if self.spec_active:
+                    self.draft_cache.free_slot(slot)
+            self._live[slot] = False
+            if req.sampling.temperature > 0:
+                self._dev = self._clear_slot(self._dev,
+                                             jnp.asarray(slot, jnp.int32))
+        if self.done_cb is not None:
+            self.done_cb(req)
+        log.warning("request %d failed: finish_reason=%s (%d retries, "
+                    "%d tokens streamed)", req.id, reason,
+                    req.n_fault_retries, len(req.generated))
+
+    def _enforce_deadlines(self) -> None:
+        """Abort any ``enforce_deadline`` request past its e2e SLO — pages
+        freed within this step, finish_reason="deadline"."""
+        now = self.metrics.clock()
+        candidates = list(self.scheduler.running.values()) \
+            + list(self.scheduler.waiting)
+        for req in candidates:
+            if not req.enforce_deadline or req.e2e_slo_s is None:
+                continue
+            rm = self.metrics.requests.get(req.id)
+            if rm is None or now - rm.t_submit <= req.e2e_slo_s:
+                continue
+            self.n_deadline_aborts += 1
+            self._fail_request(req, "deadline")
+
+    def _quarantine(self, req: Request) -> None:
+        """Non-finite logits in this slot only: free its pages, requeue it
+        at its original arrival position with exponential backoff, and
+        after ``max_fault_retries`` fail it with finish_reason="fault".
+        Every other slot's state is untouched — the batch rows are
+        independent, so survivors stay byte-identical to a fault-free run;
+        the quarantined request regenerates deterministically on retry."""
+        res = self.resilience
+        res.note_fault()
+        self.n_quarantines += 1
+        self.metrics.on_quarantine(req.id)
+        if req.n_fault_retries >= res.max_fault_retries:
+            self.n_fault_failures += 1
+            self._fail_request(req, "fault")
+            return
+        req.n_fault_retries += 1
+        req.retry_at_step = self.step_count + res.backoff_steps(
+            req.id, req.n_fault_retries)
+        slot = req.slot
+        if self.paged:
+            self.cache.preempt_slot(slot)
+            if self.spec_active:
+                self.draft_cache.preempt_slot(slot)
+        self._live[slot] = False
+        if req.sampling.temperature > 0:
+            self._dev = self._clear_slot(self._dev,
+                                         jnp.asarray(slot, jnp.int32))
+        self.scheduler.requeue(req)
+        log.warning("quarantined request %d (slot %d, non-finite logits): "
+                    "retry %d/%d no earlier than step %d", req.id, slot,
+                    req.n_fault_retries, res.max_fault_retries,
+                    req.retry_at_step)
+
+    def _handle_step_fault(self, err: Exception) -> bool:
+        """A decode dispatch failed before any state was assigned (the
+        ``dev, caches = dispatch(...)`` pattern mutates nothing on an
+        exception), so the next step() re-runs the identical work — a
+        deterministic retry. Bounded: after ``max_consecutive_step_faults``
+        the fault is treated as persistent and re-raised. Backoff is
+        exponential with seeded jitter."""
+        res = self.resilience
+        res.note_fault()
+        res.consecutive_step_faults += 1
+        self.metrics.on_step_fault()
+        if res.consecutive_step_faults > res.max_consecutive_step_faults:
+            log.error("engine step faulted %d consecutive times — persistent "
+                      "fault, giving up", res.consecutive_step_faults)
+            raise err
+        delay = min(0.001 * (2 ** (res.consecutive_step_faults - 1)), 0.05)
+        rng = np.random.default_rng((res.seed, self.step_count))
+        delay *= 1.0 + 0.25 * float(rng.random())
+        log.warning("engine step fault (%s) — retrying next step after "
+                    "%.1fms backoff (%d/%d)", err, delay * 1e3,
+                    res.consecutive_step_faults,
+                    res.max_consecutive_step_faults)
+        time.sleep(delay)
+        return True
+
+    def _on_ladder_transition(self, old: int, new: int) -> None:
+        self.metrics.on_degradation(new)
+        log.warning("degradation ladder: %s -> %s", STAGE_NAMES[old],
+                    STAGE_NAMES[new])
+        if not self.paged:
+            return
+        if new >= 2 and old < 2:        # entering flush_prefix
+            n = self.cache.flush_trie()
+            self.cache.publish_enabled = False
+            if self.spec_active:
+                self.draft_cache.publish_enabled = False
+            log.warning("flushed %d trie-only prefix nodes; prefix "
+                        "publishing suspended", n)
+        elif new < 2 and old >= 2:      # pressure cleared: re-enable
+            self.cache.publish_enabled = True
+            if self.spec_active:
+                self.draft_cache.publish_enabled = True
+            log.warning("prefix publishing re-enabled")
+
+    def _apply_ladder(self, page_blocked: bool) -> None:
+        """Feed this step's pressure signal into the ladder. Pool pressure
+        is *contention*, not commitment: 1.0 when admission was actually
+        page-blocked this step or nothing is obtainable from the pool;
+        otherwise the committed fraction. Fault storms raise pressure
+        through the resilience fault EWMA."""
+        res = self.resilience
+        if res.ladder is None:
+            return
+        if self.paged:
+            cap = max(self.cache.pool.n_pages - 1, 1)
+            avail = self.cache.available()
+            util = 1.0 if (page_blocked or avail <= 0) \
+                else 1.0 - min(avail, cap) / cap
+        else:
+            util = 1.0 if page_blocked else 0.0
+        res.ladder.observe(res.pressure(util), self.step_count)
+
+    @property
+    def spec_suspended(self) -> bool:
+        """True while the degradation ladder holds spec decoding off (the
+        plain paged decode serves mid-flight; draft K/V goes stale for
+        tokens generated meanwhile, costing acceptance — never
+        correctness — after re-enable)."""
+        ladder = self.resilience.ladder
+        return self.spec_active and ladder is not None and ladder.spec_disabled
+
+    # ------------------------------------------------------------- the step
     def step(self) -> bool:
         """One engine iteration: admit into free slots, (paged) run prefill
         chunks under the token budget, then one batched decode of all live
-        slots. Returns True if any work was done."""
+        slots. Returns True if any work was done. The resilience bracket
+        wraps every path: injected slow-steps fire in begin_step, the
+        step-time EWMA monitor and fault-rate decay in end_step."""
+        res = self.resilience
+        t0 = time.perf_counter()
+        res.begin_step(self.step_count)
+        try:
+            return self._step_inner()
+        finally:
+            res.end_step(time.perf_counter() - t0)
+
+    def _step_inner(self) -> bool:
+        self._enforce_deadlines()
+        page_blocked = False
         if self.paged:
             # one at a time: each admission consumes pages, and the pool
             # predicate for the next queue head must see that (spec mode:
             # in BOTH pools)
             def _can(r):
+                nonlocal page_blocked
                 ok = self.cache.can_admit(len(r.prompt), r.max_new_tokens,
                                           prompt=r.prompt)
                 if ok and self.spec_active:
                     ok = self.draft_cache.can_admit(
                         len(r.prompt), r.max_new_tokens, prompt=r.prompt)
+                if not ok:
+                    page_blocked = True     # pressure signal for the ladder
                 return ok
             admitted = []
             while True:
-                pairs = self.scheduler.admit(can_admit=_can, max_n=1)
+                pairs = self.scheduler.admit(can_admit=_can, max_n=1,
+                                             eligible=self._retry_eligible)
                 if pairs:
                     self._admit_one_paged(*pairs[0])
                     admitted += pairs
@@ -675,50 +911,78 @@ class Engine:
                     break
             prefilled = self._prefill_chunks()
         else:
-            admitted = self.scheduler.admit()
+            admitted = self.scheduler.admit(eligible=self._retry_eligible)
             for req, slot in admitted:
                 self._admit_one(req, slot)
             prefilled = False
         self.step_count += 1
         self.metrics.on_queue_depth(len(self.scheduler.waiting))
+        self._apply_ladder(page_blocked)
 
         if not self._live.any():
             self.metrics.on_step(0, self.n_slots)
             self._report_kv()
             return bool(admitted) or prefilled
 
-        if self.spec_active:
+        if self.spec_active and not self.spec_suspended:
             return self._step_spec()
 
+        res = self.resilience
         if self.paged:
             # materialize this step's write pages and size the active
             # block-table width to the deepest live sequence
             needed = 1
+            wpos_arr = np.zeros((self.n_slots,), np.int32)
             for slot in np.nonzero(self._live)[0]:
                 req = self.scheduler.running.get(int(slot))
                 if req is None:
                     continue
                 wpos = self._kv_len(req)
+                wpos_arr[slot] = wpos
                 self.cache.ensure_decode_page(int(slot), wpos)
                 needed = max(needed, self.cache.pages_used(int(slot),
                                                            wpos + 1))
             width = min(_next_pow2(needed), self.cache.max_pages)
             bt = self._block_tables_dev(width)
+            if self.spec_active:
+                # suspended-spec interlude: verify leaves cache ``pos`` at
+                # the window entry depth, so the device counter the plain
+                # decode trusts is stale after a spec step — resync it to
+                # the host-authoritative accepted depth or this step writes
+                # K/V over accepted positions
+                self.cache.caches = self.model.set_paged_pos(
+                    self.cache.caches, jnp.asarray(wpos_arr))
             # live mask is load-bearing: mid-prefill slots hold real block
             # tables + carried state that an unmasked decode would corrupt
-            self._dev, self.cache.caches = self._decode_paged(
-                self.params, self.cache.caches, self._dev, bt,
-                self._live_mask_dev())
+            try:
+                if res.injector is not None:
+                    res.injector.check("engine_step")
+                self._dev, self.cache.caches, ok_dev = self._decode_paged(
+                    self.params, self.cache.caches, self._dev, bt,
+                    self._live_mask_dev(), self._poison_dev("decode_logits"))
+            except Exception as e:          # noqa: BLE001 — bounded retry
+                return self._handle_step_fault(e)
         else:
-            self._dev, self.cache.caches = self._decode(
-                self.params, self.cache.caches, self._dev)
+            try:
+                if res.injector is not None:
+                    res.injector.check("engine_step")
+                self._dev, self.cache.caches, ok_dev = self._decode(
+                    self.params, self.cache.caches, self._dev,
+                    self._poison_dev("decode_logits"))
+            except Exception as e:          # noqa: BLE001 — bounded retry
+                return self._handle_step_fault(e)
+        res.consecutive_step_faults = 0
         next_np = np.asarray(self._dev["tokens"])
+        ok_np = np.asarray(ok_dev)
 
         self.metrics.on_step(int(self._live.sum()), self.n_slots)
         self._report_kv()
         for slot in np.nonzero(self._live)[0]:
             req = self.scheduler.running.get(int(slot))
             if req is None:
+                continue
+            if not ok_np[slot]:
+                self._quarantine(req)
                 continue
             self.metrics.on_decode_step(req.id, 1)
             self._emit(req, int(next_np[slot]))
@@ -754,20 +1018,35 @@ class Engine:
         live = self._live_mask_dev()
         pos0_dev = jnp.asarray(pos0)
 
-        draft_toks, draft_q, self.draft_cache.caches = self._propose(
-            self.draft_params, self.draft_cache.caches, self._dev, dbt,
-            live, pos0_dev)
-        self._dev, self.cache.caches, out_dev, n_acc_dev = self._verify(
-            self.params, self.cache.caches, self._dev, bt, live, pos0_dev,
-            draft_toks, draft_q)
+        res = self.resilience
+        try:
+            if res.injector is not None:
+                res.injector.check("engine_step")
+            # propose-then-verify retries as a unit: a fault after the
+            # draft assignment only leaves rewritten draft window pages,
+            # which the re-run re-scatters with identical values
+            draft_toks, draft_q, self.draft_cache.caches = self._propose(
+                self.draft_params, self.draft_cache.caches, self._dev, dbt,
+                live, pos0_dev, self._poison_dev("draft_logits"))
+            self._dev, self.cache.caches, out_dev, n_acc_dev, ok_dev = \
+                self._verify(self.params, self.cache.caches, self._dev, bt,
+                             live, pos0_dev, draft_toks, draft_q,
+                             self._poison_dev("decode_logits"))
+        except Exception as e:              # noqa: BLE001 — bounded retry
+            return self._handle_step_fault(e)
+        res.consecutive_step_faults = 0
         out_np = np.asarray(out_dev)
         n_acc_np = np.asarray(n_acc_dev)
+        ok_np = np.asarray(ok_dev)
 
         self.metrics.on_step(int(self._live.sum()), self.n_slots)
         self._report_kv()
         for slot in np.nonzero(self._live)[0]:
             req = self.scheduler.running.get(int(slot))
             if req is None:
+                continue
+            if not ok_np[slot]:
+                self._quarantine(req)
                 continue
             n = int(n_acc_np[slot])
             self.metrics.on_decode_step(req.id, n + 1, n_proposed=k,

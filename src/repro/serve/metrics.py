@@ -44,6 +44,12 @@ class RequestMetrics:
     e2e_slo_s: Optional[float] = None
     n_preemptions: int = 0
     cancelled: bool = False
+    # resilience: quarantine count and terminal reason ("fault" /
+    # "deadline"); aborted requests are terminal but never count toward
+    # done/latency stats (their timings describe the failure, not serving)
+    n_quarantines: int = 0
+    finish_reason: Optional[str] = None
+    aborted: bool = False
 
     @property
     def tokens_per_step(self) -> Optional[float]:
@@ -122,6 +128,15 @@ class ServeMetrics:
             {cls: 0 for cls in PRIORITY_CLASSES}
         self.n_cancelled = 0
         self.n_rejected = 0                   # server backpressure (429)
+        # resilience observability
+        self.faults_injected: Dict[str, int] = {}   # site -> count
+        self.n_quarantines = 0
+        self.n_fault_failures = 0             # retries exhausted -> "fault"
+        self.n_deadline_aborts = 0
+        self.n_shed = 0                       # 503s from the shed stage
+        self.n_step_faults = 0                # engine-step exceptions caught
+        self.degradation_stage = 0
+        self.degradation_transitions = 0
 
     # ---------------------------------------------------------------- events
     def on_submit(self, req_id: int, n_prompt: int,
@@ -164,6 +179,45 @@ class ServeMetrics:
     def on_reject(self) -> None:
         """Server turned a request away at admission (bounded queue full)."""
         self.n_rejected += 1
+
+    # ------------------------------------------------------------ resilience
+    def on_fault_injected(self, site: str) -> None:
+        """The chaos injector fired at a named site."""
+        self.faults_injected[site] = self.faults_injected.get(site, 0) + 1
+
+    def on_quarantine(self, req_id: int) -> None:
+        """Non-finite logits in this request's slot: pages freed, request
+        requeued. Like a preemption, its tokens regenerate deterministically
+        on retry, so the token count rewinds."""
+        m = self.requests[req_id]
+        m.n_quarantines += 1
+        m.n_generated = 0
+        self.n_quarantines += 1
+
+    def on_abort(self, req_id: int, reason: str) -> None:
+        """Terminal failure: retry budget exhausted ("fault") or hard
+        deadline passed ("deadline"). Terminal but not a completion —
+        excluded from done/latency stats, like a cancel."""
+        m = self.requests[req_id]
+        m.aborted = True
+        m.finish_reason = reason
+        if reason == "deadline":
+            self.n_deadline_aborts += 1
+        else:
+            self.n_fault_failures += 1
+
+    def on_shed(self) -> None:
+        """503 from the shed_batch degradation stage."""
+        self.n_shed += 1
+
+    def on_step_fault(self) -> None:
+        """An engine-step exception was caught; the step retries."""
+        self.n_step_faults += 1
+
+    def on_degradation(self, stage: int) -> None:
+        """The degradation ladder moved to ``stage``."""
+        self.degradation_stage = stage
+        self.degradation_transitions += 1
 
     def on_queue_depth(self, depth: int) -> None:
         self.queue_depth = depth
@@ -275,6 +329,14 @@ class ServeMetrics:
             "n_cancelled": self.n_cancelled,
             "n_rejected": self.n_rejected,
             "queue_depth_peak": self.queue_depth_peak,
+            "faults_injected_total": sum(self.faults_injected.values()),
+            "n_quarantines": self.n_quarantines,
+            "n_fault_failures": self.n_fault_failures,
+            "n_deadline_aborts": self.n_deadline_aborts,
+            "n_shed": self.n_shed,
+            "n_step_faults": self.n_step_faults,
+            "degradation_stage": self.degradation_stage,
+            "degradation_transitions": self.degradation_transitions,
             **per_class,
         }
 
@@ -350,6 +412,33 @@ class ServeMetrics:
                [({"priority": c, "quantile": q}, s[f"{c}_e2e_p{p}_s"])
                 for c in PRIORITY_CLASSES
                 for q, p in (("0.5", 50), ("0.95", 95))])
+        metric("repro_serve_faults_injected_total", "counter",
+               "Chaos-injector firings, by site.",
+               [({"site": site}, n)
+                for site, n in sorted(self.faults_injected.items())]
+               or [({}, 0)])
+        metric("repro_serve_quarantines_total", "counter",
+               "Slots quarantined for non-finite logits (pages freed, "
+               "request requeued).", [({}, self.n_quarantines)])
+        metric("repro_serve_fault_failures_total", "counter",
+               "Requests failed with finish_reason=fault (retry budget "
+               "exhausted).", [({}, self.n_fault_failures)])
+        metric("repro_serve_deadline_aborts_total", "counter",
+               "Requests aborted past their enforced e2e deadline.",
+               [({}, self.n_deadline_aborts)])
+        metric("repro_serve_shed_total", "counter",
+               "batch-class requests shed with 503 at the shed_batch "
+               "degradation stage.", [({}, self.n_shed)])
+        metric("repro_serve_step_faults_total", "counter",
+               "Engine-step exceptions caught and retried.",
+               [({}, self.n_step_faults)])
+        metric("repro_serve_degradation_stage", "gauge",
+               "Current degradation-ladder stage (0=normal 1=no_spec "
+               "2=flush_prefix 3=shed_batch).",
+               [({}, self.degradation_stage)])
+        metric("repro_serve_degradation_transitions_total", "counter",
+               "Degradation-ladder stage transitions.",
+               [({}, self.degradation_transitions)])
         metric("repro_serve_slo_attainment", "gauge",
                "Fraction of finished deadline-carrying requests that met "
                "their deadline (1.0 when none carry one).",

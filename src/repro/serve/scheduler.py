@@ -59,6 +59,10 @@ class Request:
     # ServeMetrics, nothing is dropped for missing a deadline.
     ttft_slo_s: Optional[float] = None
     e2e_slo_s: Optional[float] = None
+    # hard deadline: with enforce_deadline=True a request past its
+    # ``e2e_slo_s`` is aborted (pages freed within one step,
+    # finish_reason="deadline") instead of just missing attainment
+    enforce_deadline: bool = False
 
     # runtime fields owned by the engine
     state: RequestState = RequestState.WAITING
@@ -72,6 +76,13 @@ class Request:
     # preemption so a requeued request keeps its place within its class
     arrival_seq: Optional[int] = None
     n_preemptions: int = 0
+    # resilience bookkeeping: why the request finished ("fault" /
+    # "deadline"; None = ordinary EOS/length stop), quarantine retry
+    # count, and the earliest engine step a quarantined request may
+    # re-admit at (exponential backoff; survives resubmit)
+    finish_reason: Optional[str] = None
+    n_fault_retries: int = 0
+    retry_at_step: int = 0
 
     def __post_init__(self):
         self.prompt = np.asarray(self.prompt, np.int32).reshape(-1)
@@ -139,6 +150,9 @@ class Scheduler:
         req.generated = []          # reset runtime fields: resubmit == fresh
         req.prefill_pos = 0
         req.n_matched = 0
+        req.finish_reason = None
+        # n_fault_retries / retry_at_step survive: they meter the retry
+        # budget across requeues, like arrival_seq meters queue position
         if req.arrival_seq is None:     # preemption requeues keep the stamp
             req.arrival_seq = self._arrival_seq
             self._arrival_seq += 1
@@ -163,23 +177,32 @@ class Scheduler:
         return padded, n
 
     def admit(self, can_admit: Optional[Callable[[Request], bool]] = None,
-              max_n: Optional[int] = None) -> List[Tuple[Request, int]]:
+              max_n: Optional[int] = None,
+              eligible: Optional[Callable[[Request], bool]] = None
+              ) -> List[Tuple[Request, int]]:
         """Pop waiting requests into free slots (lowest slot first) in
         (priority, arrival) order. ``can_admit`` (paged engine: page-pool
         pressure) gates the queue head — a blocked head blocks everyone
         behind it, keeping admission order stable regardless of which
         slots freed when. The paged engine passes ``max_n=1`` and
         re-checks between admissions, since each admission consumes pages
-        the predicate must see."""
+        the predicate must see. ``eligible`` is different: an ineligible
+        request (a quarantined one still in retry backoff) is *skipped*,
+        not blocking — its delay is its own, FCFS holds among the
+        eligible."""
         out = []
         self.free_slots.sort()
-        while self.waiting and self.free_slots:
+        i = 0
+        while i < len(self.waiting) and self.free_slots:
             if max_n is not None and len(out) >= max_n:
                 break
-            req = self.waiting[0]
+            req = self.waiting[i]
+            if eligible is not None and not eligible(req):
+                i += 1
+                continue
             if can_admit is not None and not can_admit(req):
                 break
-            self.waiting.pop(0)
+            self.waiting.pop(i)
             slot = self.free_slots.pop(0)
             req.state = RequestState.PREFILL
             req.slot = slot
@@ -187,7 +210,7 @@ class Scheduler:
             out.append((req, slot))
         return out
 
-    def preempt(self, req: Request) -> int:
+    def requeue(self, req: Request) -> int:
         """Pull a *running* request off its slot and requeue it at its
         original arrival position (``arrival_seq`` survives, runtime fields
         reset — the resubmit machinery re-prefills it from scratch; greedy
@@ -200,9 +223,15 @@ class Scheduler:
         self.running.pop(slot, None)
         self.free_slots.append(slot)
         req.slot = None
-        req.n_preemptions += 1
         self.submit(req)
         return slot
+
+    def preempt(self, req: Request) -> int:
+        """Requeue + count: the preemption flavor of :meth:`requeue`
+        (quarantine requeues use :meth:`requeue` directly and meter their
+        own retry budget instead)."""
+        req.n_preemptions += 1
+        return self.requeue(req)
 
     def finish(self, req: Request) -> None:
         req.state = RequestState.DONE

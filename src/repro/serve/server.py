@@ -41,12 +41,20 @@ from typing import Dict, Optional, Tuple
 
 import numpy as np
 
+from .resilience import InjectedFault
 from .scheduler import PRIORITIES, Request, RequestState
 from .sampling import SamplingParams
 
 log = logging.getLogger("repro.serve.server")
 
 _DONE = object()                    # stream sentinel
+_FAULT = object()                   # stream sentinel: engine died under us
+
+# every field a generate body may carry — anything else is a 400, not a
+# silent ignore (a typo'd "max_new_token" must not quietly default)
+_GENERATE_FIELDS = frozenset((
+    "prompt", "max_new_tokens", "priority", "eos_id", "temperature",
+    "top_k", "seed", "ttft_slo_ms", "e2e_slo_ms", "enforce_deadline"))
 
 
 class _ClientGone(Exception):
@@ -102,6 +110,7 @@ class GenerateServer:
         self._server: Optional[asyncio.AbstractServer] = None
         self._pump_task: Optional[asyncio.Task] = None
         self._closed = False
+        self._engine_failed = False
 
     # ------------------------------------------------------------- lifecycle
     async def start(self) -> None:
@@ -141,7 +150,20 @@ class GenerateServer:
         engine-state mutation then happens between steps by construction."""
         while not self._closed:
             if self.engine.has_work():
-                self.engine.step()
+                try:
+                    self.engine.step()
+                except Exception:   # noqa: BLE001 — last-resort containment
+                    # the engine's own bounded retry already gave up: this
+                    # is persistent. Every open stream gets a structured
+                    # SSE error event (never a traceback on the wire), new
+                    # generates get 503, /healthz reports not-ok.
+                    log.exception("engine step failed persistently — "
+                                  "aborting %d open streams",
+                                  len(self._streams))
+                    self._engine_failed = True
+                    for stream in list(self._streams.values()):
+                        stream.queue.put_nowait(_FAULT)
+                    return
                 await asyncio.sleep(0)
             else:
                 await asyncio.sleep(self.idle_sleep_s)
@@ -166,6 +188,12 @@ class GenerateServer:
     # -------------------------------------------------------------- requests
     def _parse_generate(self, body: bytes) -> Request:
         spec = json.loads(body.decode("utf-8"))
+        if not isinstance(spec, dict):
+            raise ValueError("generate body must be a JSON object")
+        unknown = sorted(set(spec) - _GENERATE_FIELDS)
+        if unknown:
+            raise ValueError(f"unknown fields {unknown} "
+                             f"(known: {sorted(_GENERATE_FIELDS)})")
         prompt = np.asarray(spec.get("prompt", ()), np.int32)
         priority = spec.get("priority", "interactive")
         if priority not in PRIORITIES:
@@ -185,15 +213,50 @@ class GenerateServer:
             sampling=sampling,
             priority=priority,
             ttft_slo_s=_slo("ttft_slo_ms"),
-            e2e_slo_s=_slo("e2e_slo_ms"))
+            e2e_slo_s=_slo("e2e_slo_ms"),
+            enforce_deadline=bool(spec.get("enforce_deadline", False)))
         self._next_id += 1
         return req
 
     async def _handle_generate(self, reader: asyncio.StreamReader,
                                writer: asyncio.StreamWriter,
                                body: bytes) -> None:
+        if self._engine_failed:
+            writer.write(_response(
+                "503 Service Unavailable",
+                json.dumps({"error": "engine failed"}).encode()))
+            await writer.drain()
+            return
+        inj = self.engine.resilience.injector
+        if inj is not None:
+            try:
+                # chaos site "server_error": prove the 500 path is
+                # structured JSON, never a traceback on the wire
+                inj.check("server_error", self.engine.step_count)
+            except InjectedFault as e:
+                writer.write(_response(
+                    "500 Internal Server Error",
+                    json.dumps({"error": str(e), "injected": True}).encode()))
+                await writer.drain()
+                return
         try:
             req = self._parse_generate(body)
+            # degradation ladder stage 3: shed batch-class admissions so
+            # interactive traffic keeps its slots under sustained pressure
+            ladder = self.engine.resilience.ladder
+            if (ladder is not None and ladder.shed_batch
+                    and req.priority == "batch"):
+                self.engine.metrics.on_shed()
+                log.info("shedding batch request (degradation stage %d)",
+                         ladder.stage)
+                writer.write(_response(
+                    "503 Service Unavailable",
+                    json.dumps({"error": "shedding batch-class requests "
+                                "(degraded)"}).encode(),
+                    extra_headers=(
+                        f"Retry-After: {max(int(self.retry_after_s), 1)}",)))
+                await writer.drain()
+                return
             # bounded admission queue: reject instead of queueing deep —
             # the scheduler's waiting list is the backlog being bounded
             if len(self.engine.scheduler.waiting) >= self.queue_limit:
@@ -240,18 +303,31 @@ class GenerateServer:
                     getter.cancel()
                     raise _ClientGone
                 item = getter.result()
+                if item is _FAULT:
+                    # engine died mid-stream: a structured error event,
+                    # never a raw traceback in the SSE stream
+                    writer.write(_sse("error", {
+                        "id": req.id, "error": "engine fault",
+                        "finish_reason": "engine_fault",
+                        "n_tokens": len(req.generated)}))
+                    await writer.drain()
+                    return
                 if item is _DONE:
                     m = self.engine.metrics.requests.get(req.id)
-                    finish = ("eos" if (req.eos_id >= 0 and req.generated
-                                        and req.generated[-1] == req.eos_id)
-                              else "length")
+                    # the engine stamps finish_reason for resilience stops
+                    # ("fault" / "deadline"); ordinary stops derive it
+                    finish = req.finish_reason or \
+                        ("eos" if (req.eos_id >= 0 and req.generated
+                                   and req.generated[-1] == req.eos_id)
+                         else "length")
                     writer.write(_sse("done", {
                         "id": req.id,
                         "finish_reason": finish,
                         "n_tokens": len(req.generated),
                         "ttft_s": m.ttft if m else None,
                         "e2e_s": m.e2e_latency if m else None,
-                        "n_preemptions": req.n_preemptions}))
+                        "n_preemptions": req.n_preemptions,
+                        "n_fault_retries": req.n_fault_retries}))
                     await writer.drain()
                     log.info("request %d done: %d tokens (%s)",
                              req.id, len(req.generated), finish)
@@ -307,11 +383,15 @@ class GenerateServer:
                     content_type="text/plain; version=0.0.4"))
                 await writer.drain()
             elif method == "GET" and target == "/healthz":
-                info = {"ok": True, "paged": self.engine.paged,
+                ladder = self.engine.resilience.ladder
+                info = {"ok": not self._engine_failed,
+                        "paged": self.engine.paged,
                         "n_slots": self.engine.n_slots,
                         "max_len": self.engine.max_len,
                         "spec_active": self.engine.spec_active,
-                        "queue_limit": self.queue_limit}
+                        "queue_limit": self.queue_limit,
+                        "degradation_stage":
+                            ladder.stage if ladder is not None else 0}
                 writer.write(_response("200 OK", json.dumps(info).encode()))
                 await writer.drain()
             elif target in ("/v1/generate", "/metrics", "/healthz"):

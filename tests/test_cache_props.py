@@ -2,7 +2,9 @@
 
 Random interleavings of the full host-side cache lifecycle — admit,
 publish, decode-page materialization, speculative rollback, trie eviction,
-slot free — must preserve the refcount algebra at every step:
+slot free, plus the resilience fault actions (watchdog quarantine-free,
+deadline abort, degradation-ladder trie flush) — must preserve the
+refcount algebra at every step:
 
 * conservation: ``free_count + allocated_count == n_pages - 1`` (the null
   page is permanently pinned and never counted);
@@ -72,7 +74,7 @@ def _run_ops(ops, caches, slack):
     live = {}                             # slot -> [prompt, kv_len, max_new]
     for seed in ops:
         rng = np.random.default_rng(seed)
-        op = int(rng.integers(6))
+        op = int(rng.integers(9))
         if op == 0 and len(live) < caches[0].n_slots:        # admit
             slot = next(s for s in range(caches[0].n_slots) if s not in live)
             prompt = rng.integers(0, ALPHABET,
@@ -111,6 +113,23 @@ def _run_ops(ops, caches, slack):
             for c in caches:
                 c.free_slot(slot)
             del live[slot]
+        elif op == 6 and live:               # fault: quarantine-free a slot
+            # the engine's watchdog path — preempt_slot drops exactly the
+            # request's refs; trie-published pages survive for the retry
+            slot = int(rng.choice(sorted(live)))
+            for c in caches:
+                c.preempt_slot(slot)
+            del live[slot]
+        elif op == 7 and live:               # fault: deadline abort
+            # _fail_request frees the slot mid-flight like a finish
+            slot = int(rng.choice(sorted(live)))
+            for c in caches:
+                c.free_slot(slot)
+            del live[slot]
+        elif op == 8:                        # fault: degradation trie flush
+            # stage-2 ladder action: cascade-evict every reclaimable node
+            # (a shared trie drains both pools); live refs are untouched
+            caches[0].flush_trie()
         _check_invariants(caches, live)
 
     # teardown: every page must come home

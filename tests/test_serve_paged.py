@@ -254,14 +254,14 @@ def test_decode_never_touches_mid_prefill_pages():
     orig = eng._decode_paged
     deltas = []
 
-    def traced(params, caches, dev, bt, live):
+    def traced(params, caches, dev, bt, live, poison):
         mid_prefill = (long_.slot is not None
                        and long_.state == RequestState.PREFILL
                        and long_.prefill_pos >= 8)
         if mid_prefill:
             pid = int(eng.cache.block_tables[long_.slot, 0])
             before = np.asarray(caches[0]["kp"][:, pid]).copy()
-        out = orig(params, caches, dev, bt, live)
+        out = orig(params, caches, dev, bt, live, poison)
         if mid_prefill:
             after = np.asarray(out[1][0]["kp"][:, pid])
             deltas.append(float(np.abs(after - before).max()))
