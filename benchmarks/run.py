@@ -25,10 +25,11 @@ Prints ``name,value,derived`` CSV rows. Sections:
 numbers quoted in EXPERIMENTS.md.
 
 ``--check`` runs the regression gate instead of printing rows: each
-engine-level section (serve/fused/quant/paged/spec) re-runs fresh at
-smoke scale and its headline ratio is compared against the committed
-``BENCH_*.json``; a drop of more than ``--check-threshold`` (default 25%)
-exits non-zero. See ``benchmarks/check.py``.
+engine-level section (serve/fused/quant/paged/paged_prefill/spec/
+serve_degraded/serve_dist) re-runs fresh at smoke scale and its headline
+ratio is compared against the committed ``BENCH_*.json``; a drop of more
+than ``--check-threshold`` (default 25%) exits non-zero. See
+``benchmarks/check.py``.
 """
 
 import argparse

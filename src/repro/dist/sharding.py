@@ -16,8 +16,9 @@ Three entry points:
   active (CPU tests run unchanged); under :func:`use_mesh_rules` it resolves
   the logical names against the active table and emits a
   ``with_sharding_constraint``. Assignments that do not divide the concrete
-  dim are **silently dropped** (replicated) — e.g. 8 KV heads on a 16-way
-  model axis: GQA KV is replicated across TP, standard practice.
+  dim are dropped (replicated) with a warn-once — e.g. 8 KV heads on a
+  16-way model axis: GQA KV is replicated across TP, standard practice, but
+  a mis-sharded page pool must be diagnosable rather than silent.
 * :func:`tree_shardings` — ``NamedSharding`` pytree for params / optimizer
   state / caches from a logical-axis tree (see ``Model.axes()``). With a
   ``like`` tree of shapes it additionally *relocates* indivisible
@@ -31,6 +32,7 @@ Three entry points:
 from __future__ import annotations
 
 import contextlib
+import logging
 from typing import Any, Dict, Optional, Sequence, Tuple
 
 import jax
@@ -198,6 +200,30 @@ def spec_for(names: Sequence[Optional[str]], rules: Rules) -> P:
     return P(*parts)
 
 
+_log = logging.getLogger(__name__)
+
+# (shape, dropped axes, axis size) triples already warned about. A dropped
+# assignment fires once per distinct site, not once per traced op — shard()
+# runs inside jit tracing, where a layer-stacked model revisits the same
+# shapes hundreds of times.
+_DROP_WARNED: set = set()
+
+
+def _warn_dropped(mesh, axes, shape: Tuple[int, ...]) -> None:
+    names = _names_of(axes)
+    size = _axis_size(mesh, axes)
+    key = (tuple(shape), names, size)
+    if key in _DROP_WARNED:
+        return
+    _DROP_WARNED.add(key)
+    _log.warning(
+        "sharding: dropping indivisible axis assignment %s (mesh size %d) "
+        "for value of shape %s — no dim divides, replicating. A replicated "
+        "page pool or weight multiplies memory/compute by the mesh-axis "
+        "size; check the rule table against the tensor shape.",
+        names, size, tuple(shape))
+
+
 def sanitize_spec(mesh, spec: P, shape: Tuple[int, ...],
                   relocate: bool = True) -> P:
     """Divisibility sanitizer, optionally with relocation.
@@ -246,6 +272,11 @@ def sanitize_spec(mesh, spec: P, shape: Tuple[int, ...],
                 if out[i] is None and shape[i] % n == 0 and shape[i] >= n:
                     out[i] = axes
                     break
+            else:
+                _warn_dropped(mesh, axes, shape)
+    else:
+        for axes in dropped:
+            _warn_dropped(mesh, axes, shape)
     return P(*out)
 
 
@@ -261,8 +292,9 @@ def shard(x, *logical_axes):
     is not "don't care". With no active mesh this is the identity, which is
     what keeps every CPU test running the exact production model code.
 
-    Assignments that don't divide the concrete dim are silently dropped
-    (replicated), never relocated — see :func:`sanitize_spec`.
+    Assignments that don't divide the concrete dim are dropped (replicated)
+    with a warn-once carrying the tensor shape, the dropped mesh axes, and
+    the mesh-axis size — never relocated; see :func:`sanitize_spec`.
     """
     # arity is validated even with no mesh active, so the CPU suite (which
     # runs the identity path) still catches a wrong-rank annotation instead

@@ -356,6 +356,72 @@ def fused_ffn_quant(x, w_up, w_down, *, s_up, s_down, w_gate=None,
 # paged attention — decode step against the paged KV pool
 # --------------------------------------------------------------------------
 
+def _paged_tp(n_kv_heads: int):
+    """Resolve the active mesh/rules to the tensor-parallel axes the paged
+    attention ops shard their head dim over.
+
+    Returns ``(mesh, axes)`` when a mesh is active, the rule table maps
+    ``"kv_heads"`` to one or more mesh axes, and their combined size divides
+    the pool's KV-head count — i.e. exactly when ``paged_cache_axes`` places
+    the page pools sharded rather than replicated. ``None`` means run the
+    single-device path (also the indivisible-GQA fallback: 4 KV heads on an
+    8-way model axis replicate, same policy as :func:`repro.dist.sharding
+    .sanitize_spec`).
+    """
+    from repro.dist import sharding as _sh
+    mesh, rules = _sh.current()
+    if mesh is None or rules is None:
+        return None
+    axes = tuple((rules.get("kv_heads") or ()))
+    if not axes or any(a not in mesh.shape for a in axes):
+        return None
+    size = 1
+    for a in axes:
+        size *= mesh.shape[a]
+    if size <= 1 or n_kv_heads % size != 0:
+        return None
+    return mesh, axes
+
+
+def _tp_head_parallel(fn, head_axis, q, k_pages, v_pages, *rest):
+    """Head-parallel ``shard_map`` wrapper shared by the three paged ops.
+
+    Queries shard on ``head_axis``; the K/V pools shard on their KV-head
+    axis (dim 2 — matching ``paged_cache_axes``, so sharded pools are
+    consumed in place with zero resharding); block tables, lengths, and
+    chunk offsets are host-authoritative and replicated. Each shard runs
+    the routed kernel on its local head group — per-head arithmetic is
+    identical to the single-device dispatch, so after the output
+    ``all_gather`` over the head dim the result is *bit-identical* to the
+    unsharded path (the serve exactness contract extends to TP). One
+    collective per attention output; the packed projection weights around
+    it shard on the same ``tp_rules`` axes with GSPMD inserting the one
+    all-reduce per attention/FFN output.
+    """
+    tp = _paged_tp(k_pages.shape[2])
+    if tp is None:
+        return fn(q, k_pages, v_pages, *rest)
+    mesh, axes = tp
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    rest = tuple(r if hasattr(r, "ndim") else jnp.asarray(r) for r in rest)
+    q_spec = P(*(axes if i == head_axis else None for i in range(q.ndim)))
+    kv_spec = P(None, None, axes, None)
+    rest_specs = tuple(P(*([None] * r.ndim)) for r in rest)
+    out_spec = P(*([None] * q.ndim))
+
+    def inner(q_, kp_, vp_, *rest_):
+        o = fn(q_, kp_, vp_, *rest_)
+        return jax.lax.all_gather(o, axes, axis=head_axis, tiled=True)
+
+    return shard_map(
+        inner, mesh,
+        in_specs=(q_spec, kv_spec, kv_spec) + rest_specs,
+        out_specs=out_spec, check_rep=False,
+    )(q, k_pages, v_pages, *rest)
+
+
 def paged_attention(q, k_pages, v_pages, block_tables, lengths):
     """One decode step of attention against the paged KV pool (see
     :mod:`repro.kernels.paged_attention` for layout). Inference-only — no
@@ -364,13 +430,18 @@ def paged_attention(q, k_pages, v_pages, block_tables, lengths):
     On the jnp route the oracle is bitwise-stable against the slot-dense
     decode path (the serve exactness contract); the Pallas routes stream
     pages via scalar-prefetched block tables with an online-softmax combine.
+    Under an active mesh whose rules shard ``"kv_heads"``, the dispatch runs
+    head-parallel across the mesh via :func:`_tp_head_parallel` —
+    bit-identical output, sharded pools.
     """
-    if _BACKEND == "jnp":
-        return ref.paged_attention_ref(q, k_pages, v_pages, block_tables,
-                                       lengths)
-    return paged_attn_kernel.paged_attention(
-        q, k_pages, v_pages, block_tables, lengths,
-        interpret=(_BACKEND == "interpret"))
+    def routed(q_, kp_, vp_, bt_, len_):
+        if _BACKEND == "jnp":
+            return ref.paged_attention_ref(q_, kp_, vp_, bt_, len_)
+        return paged_attn_kernel.paged_attention(
+            q_, kp_, vp_, bt_, len_, interpret=(_BACKEND == "interpret"))
+
+    return _tp_head_parallel(routed, 1, q, k_pages, v_pages,
+                             block_tables, lengths)
 
 
 def paged_attention_verify(q, k_pages, v_pages, block_tables, lengths):
@@ -380,13 +451,17 @@ def paged_attention_verify(q, k_pages, v_pages, block_tables, lengths):
     oracle keeps the decode path's contraction order so greedy verification
     reproduces decode argmax; the Pallas route folds the window into the
     GQA group axis of the streaming kernel. Inference-only — no custom VJP.
+    TP-sharded head-parallel under an active mesh, like
+    :func:`paged_attention`.
     """
-    if _BACKEND == "jnp":
-        return ref.paged_attention_verify_ref(q, k_pages, v_pages,
-                                              block_tables, lengths)
-    return paged_attn_kernel.paged_attention_verify(
-        q, k_pages, v_pages, block_tables, lengths,
-        interpret=(_BACKEND == "interpret"))
+    def routed(q_, kp_, vp_, bt_, len_):
+        if _BACKEND == "jnp":
+            return ref.paged_attention_verify_ref(q_, kp_, vp_, bt_, len_)
+        return paged_attn_kernel.paged_attention_verify(
+            q_, kp_, vp_, bt_, len_, interpret=(_BACKEND == "interpret"))
+
+    return _tp_head_parallel(routed, 2, q, k_pages, v_pages,
+                             block_tables, lengths)
 
 
 def paged_prefill_attention(q, k_pages, v_pages, bt_row, start, chunk_len):
@@ -401,11 +476,18 @@ def paged_prefill_attention(q, k_pages, v_pages, bt_row, start, chunk_len):
     contract); the Pallas routes stream only the pages at or below each
     query tile's causal horizon, so prefill KV read scales with actual
     depth instead of the laddered block-table width.
+
+    TP-sharded head-parallel under an active mesh, like
+    :func:`paged_attention`.
     """
-    backend = prefill_backend()
-    if backend == "jnp":
-        return ref.paged_prefill_attention_ref(q, k_pages, v_pages, bt_row,
-                                               start, chunk_len)
-    return paged_prefill_kernel.paged_prefill_attention(
-        q, k_pages, v_pages, bt_row, start, chunk_len,
-        interpret=(backend == "interpret"))
+    def routed(q_, kp_, vp_, bt_, start_, clen_):
+        backend = prefill_backend()
+        if backend == "jnp":
+            return ref.paged_prefill_attention_ref(q_, kp_, vp_, bt_,
+                                                   start_, clen_)
+        return paged_prefill_kernel.paged_prefill_attention(
+            q_, kp_, vp_, bt_, start_, clen_,
+            interpret=(backend == "interpret"))
+
+    return _tp_head_parallel(routed, 1, q, k_pages, v_pages,
+                             bt_row, start, chunk_len)

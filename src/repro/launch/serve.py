@@ -35,6 +35,7 @@ through ``Model.slot_cache_axes()`` + the active rule table).
 
 import argparse
 import collections
+import contextlib
 import logging
 import time
 
@@ -201,10 +202,57 @@ def _build_engine(args, model, params, *, chaos=True):
     return engine, mode
 
 
+def _build_serving(args, model, params, *, chaos=True):
+    """One engine, or ``--replicas N`` of them behind a
+    :class:`repro.serve.Router` — the facade is Engine-shaped either way,
+    so the stream driver and the HTTP frontend don't branch on it."""
+    engine, mode = _build_engine(args, model, params, chaos=chaos)
+    if args.replicas <= 1:
+        return engine, mode
+    from repro.serve import Router
+
+    engines = [engine]
+    for _ in range(args.replicas - 1):
+        engines.append(_build_engine(args, model, params, chaos=chaos)[0])
+    try:
+        router = Router(engines, disagg=args.disagg,
+                        n_prefill=args.n_prefill)
+    except ValueError as e:
+        raise SystemExit(str(e))
+    mode += f" x{args.replicas}"
+    if args.disagg:
+        mode += f" (disagg: {args.n_prefill} prefill)"
+    return router, mode
+
+
+def _mesh_ctx(args):
+    """``--tp M``: install an M-way ``model`` mesh + the tp rule table for
+    the whole serving lifetime. Engines capture the active (mesh, rules)
+    at construction and re-enter them around every step/warmup, and the
+    paged attention ops shard head-parallel under them (bit-identical to
+    the single-device path)."""
+    if args.tp <= 1:
+        return contextlib.nullcontext()
+    from repro.dist import sharding as sh
+
+    n_dev = len(jax.devices())
+    if n_dev < args.tp:
+        raise SystemExit(f"--tp {args.tp} needs {args.tp} devices, "
+                         f"have {n_dev} (force host devices with "
+                         f"XLA_FLAGS=--xla_force_host_platform_device_count)")
+    mesh = jax.make_mesh((args.tp,), ("model",))
+    log.info("tensor parallel: %d-way model mesh over %s devices",
+             args.tp, mesh.devices.size)
+    return sh.use_mesh(mesh)
+
+
 def _continuous_main(args, cfg, model, params):
     from repro.kernels import ops
 
-    engine, mode = _build_engine(args, model, params)
+    engine, mode = _build_serving(args, model, params)
+    # replica-count-agnostic reporting: a Router proxies metrics/summary;
+    # per-engine internals (cache, prefill counters) read off replica 0
+    eng0 = engine.replicas[0] if hasattr(engine, "replicas") else engine
     requests = make_requests(cfg, n_requests=args.requests, rate=args.rate,
                              prompt_len=args.prompt_len, gen=args.gen,
                              seed=args.seed, shared_prefix=args.shared_prefix)
@@ -220,23 +268,30 @@ def _continuous_main(args, cfg, model, params):
              summary["queue_wait_p95_s"] * 1e3, summary["e2e_p50_s"] * 1e3,
              summary["e2e_p95_s"] * 1e3, summary["occupancy_mean"] * 100)
     if args.paged:
-        c = engine.cache
-        log.info("paged kv: page_size=%d, pool=%d pages; allocated peak "
-                 "%.2f MB vs dense reservation %.2f MB; prefill tokens "
+        c = eng0.cache
+        log.info("paged kv: page_size=%d, pool=%d pages/replica; allocated "
+                 "peak %.2f MB vs dense reservation %.2f MB; prefill tokens "
                  "computed %d (+%d reused via prefix cache); prefill kv "
                  "read %.2f MB [%s kernel]",
                  c.page_size, c.n_pages,
                  summary["kv_bytes_allocated_peak"] / 1e6,
                  summary["kv_bytes_reserved"] / 1e6,
-                 engine.n_prefill_tokens, engine.n_prefill_tokens_skipped,
+                 eng0.n_prefill_tokens, eng0.n_prefill_tokens_skipped,
                  summary["prefill_kv_bytes_read"] / 1e6,
                  ops.prefill_backend())
-        if engine.spec_active:
+        if eng0.spec_active:
             log.info("spec decode: k=%d, %.2f tokens/step, %.0f%% draft "
-                     "acceptance", engine.spec_k,
+                     "acceptance", eng0.spec_k,
                      summary["tokens_per_step_mean"],
                      summary["draft_acceptance_rate"] * 100)
-    res = engine.resilience
+    if hasattr(engine, "replicas"):
+        log.info("router: %d replicas (%d live), affinity hit rate %.0f%%, "
+                 "%d handoffs, per-replica busy %s s",
+                 len(engine.replicas), engine.n_live,
+                 engine.metrics.affinity_hit_rate * 100,
+                 engine.metrics.n_handoffs,
+                 [round(b, 2) for b in engine.busy_s])
+    res = eng0.resilience
     if res.injector is not None or summary["degradation_transitions"]:
         log.info("resilience: %s", res.summary())
     if args.chaos_verify:
@@ -248,7 +303,7 @@ def _chaos_verify(args, cfg, model, params, chaos_requests):
     that every request the chaos run completed normally produced the
     identical token sequence. Exits non-zero on any divergence — this is
     the CI proof that quarantine/retry never perturbs surviving traffic."""
-    engine, _ = _build_engine(args, model, params, chaos=False)
+    engine, _ = _build_serving(args, model, params, chaos=False)
     baseline = make_requests(cfg, n_requests=args.requests, rate=args.rate,
                              prompt_len=args.prompt_len, gen=args.gen,
                              seed=args.seed, shared_prefix=args.shared_prefix)
@@ -273,7 +328,7 @@ def _http_main(args, cfg, model, params):
     instead of driving a synthetic request stream."""
     from repro.serve import server as server_lib
 
-    engine, mode = _build_engine(args, model, params)
+    engine, mode = _build_serving(args, model, params)
     engine.metrics.clock = time.perf_counter
     log.info("http frontend over %s engine: %d slots, max_len %d",
              mode, engine.n_slots, engine.max_len)
@@ -421,6 +476,22 @@ def main(argv=None):
     p.add_argument("--queue-limit", type=int, default=64,
                    help="--http admission-queue bound; beyond it new "
                    "requests get 429 + Retry-After")
+    p.add_argument("--replicas", type=int, default=1,
+                   help="data-parallel engine replicas behind the prefix-"
+                   "affinity router (each with its own page pool, prefix "
+                   "trie, and scheduler); 1 = plain single engine")
+    p.add_argument("--tp", type=int, default=1,
+                   help="tensor parallelism: shard packed weights and the "
+                   "paged attention kernels M-way over a 'model' mesh axis "
+                   "(greedy output stays bit-identical to --tp 1)")
+    p.add_argument("--disagg", action="store_true",
+                   help="prefill/decode disaggregation (needs --paged and "
+                   "--replicas >= 2): dedicated prefill replicas hand "
+                   "requests to decode replicas at the first token, "
+                   "migrating KV pages through the router")
+    p.add_argument("--n-prefill", type=int, default=1,
+                   help="--disagg: how many replicas take the prefill role "
+                   "(the rest decode)")
     p.add_argument("--seed", type=int, default=0)
     p.add_argument("--chaos-schedule", default="",
                    help="deterministic fault injection: a builtin schedule "
@@ -470,6 +541,21 @@ def main(argv=None):
         # backend is read at trace time
         from repro.kernels import ops
         ops.set_prefill_backend(args.prefill_kernel)
+    if args.replicas < 1:
+        raise SystemExit(f"--replicas must be >= 1, got {args.replicas}")
+    if args.tp < 1:
+        raise SystemExit(f"--tp must be >= 1, got {args.tp}")
+    if args.replicas > 1 and args.static:
+        raise SystemExit("--replicas routes the continuous engine; it "
+                         "cannot combine with --static")
+    if args.disagg and args.replicas < 2:
+        raise SystemExit("--disagg needs --replicas >= 2 (dedicated "
+                         "prefill and decode replicas)")
+    if args.disagg and not args.paged:
+        raise SystemExit("--disagg migrates KV pages; combine with --paged")
+    if args.disagg and args.spec_draft:
+        raise SystemExit("--disagg cannot combine with --spec-draft (the "
+                         "draft page pool is not migrated)")
     if args.chaos_verify and not args.chaos_schedule:
         raise SystemExit("--chaos-verify needs --chaos-schedule")
     if args.chaos_verify and args.http:
@@ -493,10 +579,13 @@ def main(argv=None):
             raise SystemExit(
                 f"{args.arch} has an embed frontend — the continuous engine "
                 "serves token streams; use --static for prefill timing")
-        if args.http:
-            _http_main(args, cfg, model, params)
-        else:
-            _continuous_main(args, cfg, model, params)
+        # the mesh context stays active for the whole serving lifetime:
+        # engines capture it at construction and re-enter it per step
+        with _mesh_ctx(args):
+            if args.http:
+                _http_main(args, cfg, model, params)
+            else:
+                _continuous_main(args, cfg, model, params)
 
 
 if __name__ == "__main__":

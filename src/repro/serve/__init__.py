@@ -24,8 +24,10 @@ deadline/retry policy — all bundled into ``Resilience`` and passed as
 
 from .cache import (PagedCache, PagePool, PrefixTrie, SlotCache,
                     publish_prefix_shared, share_trie)
-from .engine import Engine
-from .metrics import RequestMetrics, ServeMetrics
+from .engine import Engine, Handoff
+from .metrics import (RequestMetrics, RouterMetrics, ServeMetrics,
+                      merge_request_metrics, render_prometheus)
+from .router import Router, prefix_affinity_key
 from .resilience import (STAGE_NAMES, DegradationLadder, FaultInjector,
                          FaultSpec, InjectedFault, Resilience, parse_schedule,
                          storm_schedule)
@@ -37,7 +39,9 @@ from .server import GenerateServer
 __all__ = [
     "Engine", "SlotCache", "PagedCache", "PagePool", "PrefixTrie",
     "share_trie", "publish_prefix_shared",
-    "ServeMetrics", "RequestMetrics", "GenerateServer",
+    "ServeMetrics", "RequestMetrics", "RouterMetrics", "GenerateServer",
+    "Router", "Handoff", "prefix_affinity_key", "render_prometheus",
+    "merge_request_metrics",
     "SamplingParams", "sample", "spec_accept", "Request", "RequestState",
     "Scheduler", "make_buckets", "PRIORITIES",
     "FaultInjector", "FaultSpec", "InjectedFault", "DegradationLadder",

@@ -47,18 +47,22 @@ models — verified in ``tests/test_serve_engine.py`` /
 from __future__ import annotations
 
 import collections
+import contextlib
+import dataclasses
 import logging
 import time
-from typing import Callable, Deque, Dict, List, Optional, Sequence
+from typing import Any, Callable, Deque, Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.dist import sharding as dist_sh
 from repro.kernels import ops
 
 from . import sampling as sampling_lib
-from .cache import PagedCache, SlotCache, publish_prefix_shared, share_trie
+from .cache import NULL_PAGE, PagedCache, SlotCache, publish_prefix_shared, \
+    share_trie
 from .metrics import ServeMetrics
 from .resilience import STAGE_NAMES, InjectedFault, Resilience
 from .scheduler import Request, RequestState, Scheduler
@@ -68,6 +72,26 @@ log = logging.getLogger("repro.serve.engine")
 
 def _next_pow2(n: int) -> int:
     return 1 << max(n - 1, 0).bit_length()
+
+
+@dataclasses.dataclass
+class Handoff:
+    """Prefill→decode migration payload (disaggregated serving).
+
+    Carries everything the decode engine needs to adopt a prefilled
+    request without recomputing the prompt: the per-attention-layer page
+    *contents* for the prompt's pages (gathered before the prefill engine
+    freed them, power-of-two padded with null-page columns for a bounded
+    compile ladder), the first sampled token, and the prompt depth. Block
+    tables stay host-authoritative per engine — the payload is content,
+    the receiving engine builds its own table through the normal
+    reservation-accounted admission path.
+    """
+    prompt_len: int
+    n_pages: int                 # real pages; <= width (pow-2 padded)
+    width: int
+    first_token: int
+    pages: List[Optional[Dict[str, Any]]]   # per block: {"kp","vp"} or None
 
 
 class Engine:
@@ -96,6 +120,12 @@ class Engine:
         self.paged = paged
         self.metrics = metrics if metrics is not None else ServeMetrics()
         self.step_count = 0
+        # the (mesh, rules) pair active at construction: every trace the
+        # engine ever runs — warmup AND the serve loop — re-enters this
+        # context, so the TP chunk/decode ladder compiles under the same
+        # shard_map closure it serves under (no first-request compile stall
+        # per replica, no warm/serve program mismatch)
+        self._mesh_ctx = dist_sh.current()
 
         # ---- resilience: the watchdog (per-step non-finite logit detection
         # + quarantine) is always on; the chaos injector and degradation
@@ -175,6 +205,12 @@ class Engine:
                                   static_argnames=("final",))
             self._decode_paged = jax.jit(self._decode_paged_impl)
             self._bt_dev: Dict[int, jax.Array] = {}
+            # disaggregated-serving handoff ops (compiled per pow-2 width
+            # on first use): page-content gather on the prefill side,
+            # scatter-adopt + slot arming on the decode side
+            self._gather_pages = jax.jit(self._gather_pages_impl)
+            self._adopt = jax.jit(self._adopt_impl)
+            self._arm_slot = jax.jit(self._set_slot_impl)
             # observability for the prefix-reuse contract (tests assert a
             # shared-prefix batch skips chunks)
             self.n_prefill_chunks = 0
@@ -211,6 +247,14 @@ class Engine:
         # EOS/length stop (never for cancel or preemption).
         self.token_cb: Optional[Callable[[Request, int, int], None]] = None
         self.done_cb: Optional[Callable[[Request], None]] = None
+        # disaggregation hook (the router wires this on prefill-role
+        # replicas): fires instead of done_cb when a ``prefill_only``
+        # request reaches its (clamped) budget without hitting EOS, with
+        # ``req.handoff`` already extracted — the receiver resubmits the
+        # request to a decode-role engine
+        self.handoff_cb: Optional[Callable[[Request], None]] = None
+        self.n_handoffs_out = 0
+        self.n_handoffs_in = 0
         # interactive-over-batch preemption needs page eviction: paged only
         self.preemption = bool(preemption) and paged
         self.n_preemptions = 0
@@ -358,6 +402,37 @@ class Engine:
         return dict(dev, temps=dev["temps"].at[slot].set(0.0),
                     top_ks=dev["top_ks"].at[slot].set(0))
 
+    def _gather_pages_impl(self, caches, ids):
+        """Gather the page *contents* at pool indices ``ids`` from every
+        attention layer (disagg handoff, prefill side). Recurrent blocks
+        have no page-addressable state and yield None (the router gates
+        disaggregation to all-attention archs)."""
+        out = []
+        for spec, c in zip(self.model.block_specs, caches):
+            if spec["kind"] in ("attn", "attn_moe"):
+                out.append({"kp": c["kp"][:, ids], "vp": c["vp"][:, ids]})
+            else:
+                out.append(None)
+        return out
+
+    def _adopt_impl(self, caches, pages, ids, slot, pos):
+        """Scatter a handoff payload into this engine's pool at ``ids`` and
+        set the slot's depth counter (disagg handoff, decode side). Padded
+        columns carry the null page on both sides, so their scatter is the
+        usual harmless null-page write; trie-matched destination pages
+        receive bit-identical content (prefill is deterministic and the
+        trie is token-keyed), so overwriting shared pages is a no-op by
+        value."""
+        new = []
+        for c, p in zip(caches, pages):
+            if p is not None:
+                c = dict(c,
+                         kp=c["kp"].at[:, ids].set(p["kp"].astype(c["kp"].dtype)),
+                         vp=c["vp"].at[:, ids].set(p["vp"].astype(c["vp"].dtype)),
+                         pos=c["pos"].at[:, slot].set(pos))
+            new.append(c)
+        return new
+
     # -------------------------------------------------------------- requests
     def submit(self, req: Request) -> None:
         # always stamped with the metrics clock: arrival_time is scheduling
@@ -371,6 +446,21 @@ class Engine:
 
     def has_work(self) -> bool:
         return self.scheduler.has_work()
+
+    def stats_gauges(self) -> Dict[str, float]:
+        """Instantaneous engine gauges for the /metrics scrape — one method
+        the HTTP server and the replica router both read, so a Router can
+        stand in for an Engine without the server peeking at internals."""
+        g = {
+            "repro_serve_slots_live": float(self._live.sum()),
+            "repro_serve_slots_total": float(self.n_slots),
+            "repro_serve_engine_steps_total": float(self.step_count),
+        }
+        if self.paged:
+            g["repro_serve_kv_pages_allocated"] = float(
+                self.cache.pool.allocated_count)
+            g["repro_serve_kv_pages_free"] = float(self.cache.pool.free_count)
+        return g
 
     def cancel(self, req: Request) -> None:
         """Abort a request (client disconnect): pull it out of whichever
@@ -472,8 +562,13 @@ class Engine:
     def _admit_one_paged(self, req: Request, slot: int) -> None:
         """Paged admission is bookkeeping only: build the block table
         (reusing trie-matched prefix pages) and queue the prefill chunks —
-        no device work until the chunk loop runs."""
+        no device work until the chunk loop runs. A request arriving with a
+        :class:`Handoff` payload (disaggregated serving) adopts the
+        prefilled pages instead of queueing chunks."""
         self.metrics.on_admit(req.id)
+        if req.handoff is not None:
+            self._admit_handoff(req, slot)
+            return
         matched = self.cache.admit_request(slot, req.prompt,
                                            req.max_new_tokens)
         if self.spec_active:
@@ -486,6 +581,61 @@ class Engine:
         req.n_matched = matched
         self.n_prefill_tokens_skipped += matched
         self._prefill_queue.append(req)
+
+    # ------------------------------------------------- disaggregated serving
+    def extract_handoff(self, req: Request) -> Handoff:
+        """Gather the prompt's page contents for migration to a decode-role
+        engine. Must run while the request still owns its block-table row
+        (``_emit`` calls it just before the stop-path ``free_slot``)."""
+        assert self.paged and req.slot is not None
+        n_tok = len(req.prompt)
+        n_pages = self.cache.pages_for(n_tok)
+        width = min(_next_pow2(n_pages), self.cache.max_pages)
+        ids = np.full((width,), NULL_PAGE, np.int32)
+        ids[:n_pages] = self.cache.block_tables[req.slot][:n_pages]
+        pages = self._gather_pages(self.cache.caches, jnp.asarray(ids))
+        self.n_handoffs_out += 1
+        return Handoff(prompt_len=n_tok, n_pages=n_pages, width=width,
+                       first_token=int(req.generated[0]), pages=pages)
+
+    def _admit_handoff(self, req: Request, slot: int) -> None:
+        """Adopt a prefilled request: the normal reservation-accounted
+        admission builds the block table (so handoff can never deadlock —
+        ``can_admit`` already cleared the worst-case page count), the
+        payload scatters into the allocated pages, and the slot arms with
+        the first token the prefill engine sampled. No token is re-emitted:
+        index 0 already streamed from the prefill replica."""
+        h: Handoff = req.handoff
+        assert h.prompt_len == len(req.prompt)
+        matched = self.cache.admit_request(slot, req.prompt,
+                                           req.max_new_tokens)
+        # scatter ALL prompt pages, trie-matched ones included: the trie is
+        # token-keyed and prefill is deterministic, so matched destination
+        # pages receive the bytes they already hold — one compile per
+        # pow-2 width instead of one per (width, matched) pair
+        ids = np.full((h.width,), NULL_PAGE, np.int32)
+        ids[:h.n_pages] = self.cache.block_tables[slot][:h.n_pages]
+        self.cache.caches = self._adopt(
+            self.cache.caches, h.pages, jnp.asarray(ids),
+            jnp.asarray(slot, jnp.int32),
+            jnp.asarray(h.prompt_len, jnp.int32))
+        sp = req.sampling
+        self._dev = self._arm_slot(
+            self._dev, jnp.asarray(slot, jnp.int32),
+            jnp.asarray(h.first_token, jnp.int32),
+            jnp.asarray(sp.temperature, jnp.float32),
+            jnp.asarray(sp.top_k, jnp.int32),
+            sampling_lib.base_key(sp.seed))
+        req.handoff = None
+        req.prefill_pos = h.prompt_len
+        req.n_matched = matched
+        req.generated = [h.first_token]
+        req.state = RequestState.DECODE
+        self._live[slot] = True
+        # adopted pages hold real K/V: publish so later handoffs sharing
+        # the prefix adopt into (bit-identical) cached pages
+        self.cache.publish_prefix(req.prompt, slot, h.prompt_len)
+        self.n_handoffs_in += 1
 
     def _prefill_chunks(self) -> bool:
         """Run prefill chunks FCFS under the per-step token budget; arm
@@ -583,6 +733,18 @@ class Engine:
                     self.cache.max_pages)
         return [w for w in self.decode_widths() if w >= w_min]
 
+    def _mesh_scope(self):
+        """Re-enter the (mesh, rules) context captured at construction.
+        Every jit trace the engine triggers — warmup and the serve loop
+        alike — runs inside this scope, so the TP ``shard_map`` closure in
+        the paged attention ops resolves identically everywhere: warmup
+        compiles exactly the programs serving will run. Identity when the
+        engine was built without a mesh."""
+        mesh, rules = self._mesh_ctx
+        if mesh is None or rules is None:
+            return contextlib.nullcontext()
+        return dist_sh.use_mesh_rules(mesh, rules)
+
     def warmup(self) -> None:
         """Pre-compile the paged decode program at every active-width rung
         so steady-state serving never pauses for a mid-stream compile (the
@@ -592,7 +754,14 @@ class Engine:
         prefill width × {non-final, final} chunk variant (plus the draft
         mirror in spec mode), against the null page so no real K/V moves.
         Results are discarded; engine state is untouched. No-op for the
-        dense engine (one decode shape, compiled on first step)."""
+        dense engine (one decode shape, compiled on first step). Mesh-aware:
+        compiles under the construction-time mesh scope (see
+        :meth:`_mesh_scope`), not whatever mesh happens to be active at
+        call time."""
+        with self._mesh_scope():
+            self._warmup_inner()
+
+    def _warmup_inner(self) -> None:
         for w in self.decode_widths():
             zbt = jnp.zeros((self.n_slots, w), jnp.int32)
             zlive = jnp.zeros((self.n_slots,), bool)
@@ -669,8 +838,19 @@ class Engine:
                 or (req.eos_id >= 0 and tok == req.eos_id))
         if stop:
             slot = req.slot
+            # disaggregation: a prefill_only request that exhausted its
+            # (clamped) budget without EOS migrates instead of finishing —
+            # payload gathered while the slot still owns its pages, then
+            # the normal free path runs and handoff_cb resubmits elsewhere.
+            # An EOS stop is a real completion: no decode work remains.
+            handing_off = (req.prefill_only and self.handoff_cb is not None
+                           and self.paged
+                           and not (req.eos_id >= 0 and tok == req.eos_id))
+            if handing_off:
+                req.handoff = self.extract_handoff(req)
             self.scheduler.finish(req)
-            self.metrics.on_done(req.id)
+            if not handing_off:
+                self.metrics.on_done(req.id)
             if slot is not None:
                 if self.paged:
                     self.cache.free_slot(slot)
@@ -680,7 +860,9 @@ class Engine:
                 if req.sampling.temperature > 0:
                     self._dev = self._clear_slot(
                         self._dev, jnp.asarray(slot, jnp.int32))
-            if self.done_cb is not None:
+            if handing_off:
+                self.handoff_cb(req)
+            elif self.done_cb is not None:
                 self.done_cb(req)
 
     def _kv_len(self, req: Request) -> int:
@@ -874,7 +1056,8 @@ class Engine:
         t0 = time.perf_counter()
         res.begin_step(self.step_count)
         try:
-            return self._step_inner()
+            with self._mesh_scope():
+                return self._step_inner()
         finally:
             res.end_step(time.perf_counter() - t0)
 

@@ -83,6 +83,15 @@ class Request:
     finish_reason: Optional[str] = None
     n_fault_retries: int = 0
     retry_at_step: int = 0
+    # disaggregated serving (repro.serve.router): a prefill_only request
+    # stops after its first sampled token and migrates — the engine fires
+    # handoff_cb with ``handoff`` (an engine.Handoff payload) populated,
+    # and the router resubmits it to a decode-role replica, where admission
+    # adopts the payload instead of queueing prefill chunks. Both fields
+    # survive Scheduler.submit's runtime-field reset (a requeued handoff
+    # must still adopt, not re-prefill).
+    prefill_only: bool = False
+    handoff: Optional[object] = None
 
     def __post_init__(self):
         self.prompt = np.asarray(self.prompt, np.int32).reshape(-1)

@@ -366,17 +366,10 @@ class GenerateServer:
             if method == "POST" and target == "/v1/generate":
                 await self._handle_generate(reader, writer, body)
             elif method == "GET" and target == "/metrics":
-                gauges = {
-                    "repro_serve_slots_live": float(self.engine._live.sum()),
-                    "repro_serve_slots_total": float(self.engine.n_slots),
-                    "repro_serve_engine_steps_total":
-                        float(self.engine.step_count),
-                }
-                if self.engine.paged:
-                    gauges["repro_serve_kv_pages_allocated"] = \
-                        float(self.engine.cache.pool.allocated_count)
-                    gauges["repro_serve_kv_pages_free"] = \
-                        float(self.engine.cache.pool.free_count)
+                # one method on the engine (or replica Router) — the server
+                # never peeks at engine internals, so a Router's fleet
+                # gauges and a single Engine's slot gauges both just work
+                gauges = self.engine.stats_gauges()
                 text = self.engine.metrics.prometheus(extra_gauges=gauges)
                 writer.write(_response(
                     "200 OK", text.encode("utf-8"),

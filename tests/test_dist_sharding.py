@@ -79,6 +79,28 @@ def test_sanitize_relocates_to_dividing_dim():
     assert got == P(None, None)
 
 
+def test_sanitize_drop_warns_once_with_context(caplog):
+    """A dropped (replicated) assignment is no longer silent: one warning
+    naming the mesh axis, its size, and the tensor shape — once per
+    distinct (shape, axes, size), not per call."""
+    import logging
+
+    mesh = _fake_mesh(data=2, model=4)
+    sh._DROP_WARNED.clear()
+    with caplog.at_level(logging.WARNING, logger="repro.dist.sharding"):
+        sh.sanitize_spec(mesh, P(("model",), None), (6, 9))
+        sh.sanitize_spec(mesh, P(("model",), None), (6, 9))      # deduped
+        sh.sanitize_spec(mesh, P(None, None, ("model",), None),
+                         (4, 16, 2, 64), relocate=False)
+    drops = [r.getMessage() for r in caplog.records
+             if "dropping indivisible" in r.getMessage()]
+    assert len(drops) == 2, drops
+    assert "('model',)" in drops[0] and "4" in drops[0] \
+        and "(6, 9)" in drops[0]
+    assert "(4, 16, 2, 64)" in drops[1]
+    sh._DROP_WARNED.clear()
+
+
 # ------------------------------------------------------- no-mesh identity
 
 def test_shard_is_identity_without_mesh():
